@@ -1,0 +1,59 @@
+"""Paper Figure 2: final model quality vs sampling distribution x m.
+
+Trains the same reduced model to (near-)convergence under each sampler and
+sample size, then reports the FULL-softmax eval loss.  The paper's claims:
+
+  (C1) quadratic needs 1-2 orders of magnitude fewer samples than uniform;
+  (C2) softmax sampling quality is independent of m.
+
+Quick mode keeps the sweep CPU-sized; --full widens it (EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.common import train_small
+from repro.configs import get_config
+
+SAMPLERS_DEFAULT = ["uniform", "softmax", "block-quadratic",
+                    "quadratic-oracle"]
+
+
+def run(samplers=None, ms=(4, 16, 64), steps=400, out_json=None,
+        arch="youtube-dnn", vocab=2048, quiet=False):
+    samplers = samplers or SAMPLERS_DEFAULT
+    cfg = get_config(arch).reduced(
+        vocab_size=vocab, m_negatives=8, sampler_block=64,
+        tower_dims=(64, 32), abs_softmax=False)
+    rows = []
+    for sampler in samplers:
+        for m in ms:
+            final, _ = train_small(cfg, sampler, m, steps)
+            rows.append({"sampler": sampler, "m": m, "final_loss": final})
+            if not quiet:
+                print(f"  {sampler:18s} m={m:5d} final full-softmax loss "
+                      f"{final:.4f}", flush=True)
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.full:
+        run(samplers=["uniform", "unigram", "softmax", "abs-softmax",
+                      "block-quadratic", "quadratic-oracle",
+                      "quartic-oracle"],
+            ms=(2, 4, 8, 16, 32, 64, 128, 256), steps=1200,
+            vocab=8192, out_json=args.out)
+    else:
+        run(out_json=args.out)
+
+
+if __name__ == "__main__":
+    main()

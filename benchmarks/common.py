@@ -1,0 +1,72 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time per call in microseconds (blocks on outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def csv_row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.1f},{derived}"
+
+
+def train_small(cfg, sampler_name: str, m: int, steps: int, seed: int = 0,
+                lr: float = 1e-2, global_batch: int = 64,
+                eval_every: int = 0):
+    """Train a reduced model with a given sampler; return (final full-softmax
+    eval loss, loss curve).  The workhorse of the Fig. 2/3/4 replications."""
+    import dataclasses
+
+    from repro.core.sampled_softmax import full_softmax_loss
+    from repro.data.pipeline import batch_iterator_for
+    from repro.models import api
+    from repro.optim import make_optimizer
+    from repro.sharding.rules import local_ctx
+    from repro.train.step import init_train_state, make_train_step
+
+    cfg = dataclasses.replace(cfg, sampler=sampler_name, m_negatives=m)
+    ctx = local_ctx()
+    opt = make_optimizer("adamw", lr, weight_decay=0.0)
+    data = batch_iterator_for(cfg, ctx, global_batch=global_batch,
+                              seq_len=32, seed=seed)
+    state = init_train_state(jax.random.PRNGKey(seed), cfg, ctx, opt,
+                             max_len=32)
+    step_fn = jax.jit(make_train_step(cfg, ctx, opt))
+
+    @jax.jit
+    def eval_loss(params, batch):
+        h, labels, _ = api.backbone_hidden(params, batch, cfg, ctx)
+        head = api.head_table(params, cfg)
+        # the eval prediction distribution must match training (paper §3.3)
+        return jnp.mean(full_softmax_loss(head, h, labels,
+                                          abs_mode=cfg.abs_softmax))
+
+    curve = []
+    # large fixed eval batch for a stable final-quality readout
+    import jax as _jax
+    eval_batch = jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0),
+        *[next(data) for _ in range(8)])
+    for i in range(steps):
+        batch = next(data)
+        state, metrics = step_fn(state, batch,
+                                 jax.random.fold_in(
+                                     jax.random.PRNGKey(seed + 999), i))
+        if eval_every and i % eval_every == 0:
+            curve.append((i, float(eval_loss(state.params, eval_batch))))
+    final = float(eval_loss(state.params, eval_batch))
+    return final, curve

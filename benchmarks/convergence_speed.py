@@ -1,0 +1,53 @@
+"""Paper Figures 3/4: convergence curves.
+
+Fig. 3: fixed sampler, varying m — once m removes the bias, more samples do
+        not speed up convergence (C3).
+Fig. 4: fixed m, varying sampler — similar convergence SPEED, different
+        final LEVEL (C4).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.common import train_small
+from repro.configs import get_config
+
+
+def run(mode="m_sweep", steps=400, out_json=None, quiet=False, lr=3e-3):
+    cfg = get_config("youtube-dnn").reduced(
+        vocab_size=1024, sampler_block=64, tower_dims=(64, 32),
+        abs_softmax=False)
+    curves = {}
+    if mode == "m_sweep":
+        for m in (4, 16, 64, 256):
+            _, curve = train_small(cfg, "block-quadratic", m, steps,
+                                   eval_every=25, lr=lr)
+            curves[f"quadratic m={m}"] = curve
+    else:  # sampler sweep at fixed m
+        for sampler in ("uniform", "softmax", "block-quadratic"):
+            _, curve = train_small(cfg, sampler, 16, steps, eval_every=25,
+                                   lr=lr)
+            curves[f"{sampler} m=16"] = curve
+    if not quiet:
+        for name, curve in curves.items():
+            tail = ", ".join(f"{s}:{l:.3f}" for s, l in curve[-3:])
+            print(f"  {name:24s} final: {tail}", flush=True)
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(curves, f, indent=1)
+    return curves
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["m_sweep", "sampler_sweep"],
+                    default="m_sweep")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    run(mode=args.mode, steps=args.steps, out_json=args.out)
+
+
+if __name__ == "__main__":
+    main()

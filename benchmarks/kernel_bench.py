@@ -1,0 +1,67 @@
+"""Microbenchmarks of the Pallas kernels vs their jnp references.
+
+On CPU the Pallas kernels run in interpret mode (slow, correctness-only);
+the interesting CPU numbers are the jnp reference columns.  On TPU the same
+harness times the compiled kernels.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from benchmarks.common import csv_row, time_fn
+from repro.kernels import ops, ref
+
+
+def run(quiet=False, interpret_too=False):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    on_tpu = jax.default_backend() == "tpu"
+
+    w = jax.random.normal(key, (64, 256, 64))
+    rows.append(csv_row("zstats/jnp-ref/64x256x64",
+                        time_fn(jax.jit(ref.zstats_ref), w)))
+    if on_tpu or interpret_too:
+        rows.append(csv_row("zstats/pallas/64x256x64",
+                            time_fn(ops.zstats, w)))
+
+    h = jax.random.normal(key, (1024, 64))
+    z = ref.zstats_ref(w)
+    cnt = jax.numpy.ones((64,))
+    rows.append(csv_row(
+        "block_scores/jnp-ref/T1024xN64",
+        time_fn(jax.jit(lambda *a: ref.block_scores_ref(*a, 100.0)),
+                h, z, cnt)))
+
+    hh = jax.random.normal(key, (1024, 128))
+    wn = jax.random.normal(key, (512, 128))
+    lq = jax.numpy.zeros((512,))
+    pos = jax.numpy.zeros((1024,))
+    rows.append(csv_row(
+        "sampled_loss/jnp-ref/T1024xm512",
+        time_fn(jax.jit(lambda *a: ref.sampled_loss_ref(*a, 512)),
+                hh, wn, lq, pos)))
+
+    q = jax.random.normal(key, (1, 512, 8, 64))
+    k2 = jax.random.normal(key, (1, 512, 8, 64))
+    rows.append(csv_row(
+        "flash_attention/jnp-ref/S512",
+        time_fn(jax.jit(lambda *a: ref.flash_attention_ref(*a, causal=True)),
+                q, k2, k2)))
+    if not quiet:
+        for r in rows:
+            print(r, flush=True)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--interpret", action="store_true",
+                    help="also time interpret-mode Pallas (very slow)")
+    args = ap.parse_args()
+    run(interpret_too=args.interpret)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (timing benches) and summary
+tables (training-quality benches run in quick mode here; the full sweeps
+behind EXPERIMENTS.md run via each module's --full flag).
+"""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    print("# sampler_cost (paper §3.2 runtime) — name,us_per_call,derived")
+    from benchmarks import sampler_cost
+    sampler_cost.run(ns=(4096, 16384))
+
+    print("\n# kernel_bench — name,us_per_call,derived")
+    from benchmarks import kernel_bench
+    kernel_bench.run()
+
+    print("\n# bias_vs_samples (paper Fig. 2, quick mode)")
+    from benchmarks import bias_vs_samples
+    bias_vs_samples.run(ms=(4, 32), steps=150,
+                        samplers=["uniform", "softmax", "block-quadratic"])
+
+    print("\n# convergence_speed (paper Fig. 3, quick mode)")
+    from benchmarks import convergence_speed
+    convergence_speed.run(steps=150)
+
+    print("\n# roofline (from dry-run artifacts, if present)")
+    try:
+        from benchmarks import roofline
+        rows = roofline.run(quiet=False)
+        if not rows:
+            print("  (no dry-run artifacts under experiments/dryrun — run "
+                  "python -m repro.launch.dryrun --all first)")
+    except Exception as e:  # noqa: BLE001
+        print(f"  roofline skipped: {e}")
+
+    print(f"\n# total benchmark wall time: {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

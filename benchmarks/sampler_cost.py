@@ -1,0 +1,84 @@
+"""Paper §3.2 runtime claims: sampling cost scaling.
+
+Compares, as the number of classes n grows:
+  * oracle softmax sampling          — O(n d) per query batch
+  * two-level block kernel sampling  — O(n_blocks r^2 + m B r)
+  * batch-shared kernel sampling     — O(n_blocks r^2) amortized over T
+and the statistics refresh (one batched Gram matmul).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, time_fn
+from repro.core import blocks
+from repro.core.kernel_fns import quadratic_kernel
+from repro.core.samplers import softmax_oracle
+
+
+def run(ns=(4096, 16384, 65536), d=64, m=64, t_batch=64, quiet=False):
+    k = quadratic_kernel(100.0)
+    rows = []
+    for n in ns:
+        w = jax.random.normal(jax.random.PRNGKey(0), (n, d)) * 0.3
+        hs = jax.random.normal(jax.random.PRNGKey(1), (t_batch, d))
+        block = 256
+
+        # oracle softmax (O(n d) per query)
+        oracle = softmax_oracle()
+        ostate = oracle.init(None, w)
+        f_oracle = jax.jit(lambda h, key: oracle.sample_batch(
+            ostate, h, m, key))
+        us = time_fn(f_oracle, hs, jax.random.PRNGKey(2))
+        rows.append(csv_row(f"sample/softmax-oracle/n={n}", us,
+                            f"per-query={us/t_batch:.1f}us"))
+
+        # two-level kernel sampler, per-example
+        stats = blocks.build(w, block)
+        f_blk = jax.jit(lambda h, key: jax.vmap(
+            lambda hh, kk: blocks.sample(stats, k, hh, m, kk))(
+                h, jax.random.split(key, h.shape[0])))
+        us = time_fn(f_blk, hs, jax.random.PRNGKey(3))
+        rows.append(csv_row(f"sample/block-kernel/n={n}", us,
+                            f"per-query={us/t_batch:.1f}us"))
+
+        # batch-shared kernel sampling (one draw for the whole batch)
+        f_shared = jax.jit(lambda h, key: blocks.sample_shared(
+            stats, k, h, m, key))
+        us = time_fn(f_shared, hs, jax.random.PRNGKey(4))
+        rows.append(csv_row(f"sample/batch-shared/n={n}", us,
+                            f"amortized={us/t_batch:.2f}us/query"))
+
+        # statistics refresh
+        f_build = jax.jit(lambda ww: blocks.build(ww, block))
+        us = time_fn(f_build, w)
+        rows.append(csv_row(f"refresh/gram-rebuild/n={n}", us, ""))
+
+        # sparse path update (paper Fig. 1b), 32 rows
+        ids = jnp.arange(32)
+        w_new = jax.random.normal(jax.random.PRNGKey(5), (32, d))
+        f_upd = jax.jit(lambda s_, ii, wn: blocks.update_rows(s_, ii, wn))
+        us = time_fn(f_upd, stats, ids, w_new)
+        rows.append(csv_row(f"refresh/path-update-32/n={n}", us, ""))
+
+    if not quiet:
+        for r in rows:
+            print(r, flush=True)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.full:
+        run(ns=(4096, 16384, 65536, 262144))
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Quickstart: kernel-based adaptive sampled softmax in ~60 lines.
+
+Builds a toy class-embedding table, samples negatives three ways (uniform,
+the paper's divide & conquer tree, the TPU two-level block sampler), and
+shows that (a) the kernel samplers report exact log-probabilities and
+(b) the corrected sampled-softmax loss approaches the full softmax loss as
+m grows — fastest for the adaptive kernels.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocks, tree
+from repro.core.kernel_fns import quadratic_kernel
+from repro.core.sampled_softmax import (
+    full_softmax_loss,
+    sampled_softmax_from_embeddings,
+)
+from repro.core.samplers import make_sampler
+
+n_classes, d, batch = 4_000, 32, 32
+key = jax.random.PRNGKey(0)
+w = jax.random.normal(key, (n_classes, d)) * 0.3          # class embeddings
+h = jax.random.normal(jax.random.PRNGKey(1), (batch, d))  # hidden states
+labels = jax.random.randint(jax.random.PRNGKey(2), (batch,), 0, n_classes)
+kernel = quadratic_kernel(alpha=100.0)
+
+print("full softmax loss (reference):",
+      float(full_softmax_loss(w, h, labels).mean()))
+
+# --- the paper's O(D log n) divide & conquer tree (faithful) ---------------
+stats = tree.build(w, kernel, leaf_size=64)
+ids, logq = tree.sample(stats, kernel, h[0], m=128, key=jax.random.PRNGKey(3))
+print(f"\ntree sampler: {len(set(ids.tolist()))} distinct negatives, "
+      f"logq in [{float(logq.min()):.2f}, {float(logq.max()):.2f}]")
+
+# --- the TPU-native two-level block sampler --------------------------------
+bstats = blocks.build(w, block_size=256)
+ids_b, logq_b = blocks.sample_shared(bstats, kernel, h, m=128,
+                                     key=jax.random.PRNGKey(4))
+print(f"block sampler (batch-shared): {len(set(ids_b.tolist()))} distinct")
+
+# --- bias vs m for three samplers -------------------------------------------
+for name in ("uniform", "block-quadratic-shared", "softmax"):
+    sampler = make_sampler(name)
+    state = sampler.init(jax.random.PRNGKey(5), w)
+    print(f"\n{name}:")
+    for m in (16, 64, 256):
+
+        @jax.jit
+        def one_rep(key, state=state, m=m, sampler=sampler):
+            nid, lq = sampler.sample_batch(state, h, m, key)
+            return sampled_softmax_from_embeddings(w, h, labels, nid,
+                                                   lq).mean()
+
+        keys = jax.random.split(jax.random.PRNGKey(100), 8)
+        mean = float(jnp.mean(jax.lax.map(one_rep, keys)))
+        print(f"  m={m:5d}  mean sampled loss {mean:.4f}")

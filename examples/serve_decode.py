@@ -1,0 +1,56 @@
+"""Batched serving demo (deliverable b): prefill a prompt batch, then decode
+greedily with the KV-cache engine — the path the decode_* dry-run cells lower.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py --tokens 16
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serve.engine import make_decode_step, make_prefill_step
+from repro.sharding.rules import local_ctx
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    ctx = local_ctx()
+    max_len = args.prompt_len + args.tokens + 1
+    params = api.init_params(jax.random.PRNGKey(0), cfg, ctx,
+                             max_len=max_len)
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+
+    prefill = jax.jit(make_prefill_step(cfg, ctx, max_len=max_len))
+    decode = jax.jit(make_decode_step(cfg, ctx))
+
+    t0 = time.time()
+    nxt, cache = prefill(params, {"tokens": prompts})
+    seqs = [nxt]
+    pos = jnp.full((args.batch,), args.prompt_len, jnp.int32)
+    for _ in range(args.tokens - 1):
+        nxt, cache = decode(params, nxt[:, None], cache, pos)
+        seqs.append(nxt)
+        pos = pos + 1
+    out = jnp.stack(seqs, axis=1)
+    dt = time.time() - t0
+    print(f"arch={cfg.name} batch={args.batch} generated "
+          f"{args.tokens} tokens in {dt:.2f}s "
+          f"({args.batch*args.tokens/dt:.1f} tok/s incl. compile)")
+    for i, row in enumerate(out.tolist()):
+        print(f"  seq{i}: {row}")
+
+
+if __name__ == "__main__":
+    main()

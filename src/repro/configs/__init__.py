@@ -1,0 +1,60 @@
+"""Config registry: the 10 assigned architectures + the paper's own models."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig  # noqa: F401
+
+#: the 10 assigned archs (dry-run / roofline matrix) in assignment order
+ASSIGNED_ARCHS: tuple[str, ...] = (
+    "falcon-mamba-7b",
+    "qwen2-72b",
+    "starcoder2-3b",
+    "mistral-nemo-12b",
+    "llama3-8b",
+    "dbrx-132b",
+    "deepseek-v3-671b",
+    "chameleon-34b",
+    "whisper-large-v3",
+    "jamba-v0.1-52b",
+)
+
+#: the paper's own experimental models
+PAPER_ARCHS: tuple[str, ...] = ("ptb-lstm", "youtube-dnn")
+
+_MODULES = {
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "qwen2-72b": "qwen2_72b",
+    "starcoder2-3b": "starcoder2_3b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "llama3-8b": "llama3_8b",
+    "dbrx-132b": "dbrx_132b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "chameleon-34b": "chameleon_34b",
+    "whisper-large-v3": "whisper_large_v3",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "ptb-lstm": "ptb_lstm",
+    "youtube-dnn": "youtube_dnn",
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch '{name}'; have {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def list_archs() -> list[str]:
+    return list(_MODULES)
+
+
+def shapes_for(cfg: ArchConfig) -> list[ShapeConfig]:
+    """The assigned shape set for an arch, with out-of-contract cells removed
+    (long_500k needs sub-quadratic attention; see DESIGN.md)."""
+    out = []
+    for shape in SHAPES.values():
+        if shape.name == "long_500k" and not cfg.supports_long_context():
+            continue
+        out.append(shape)
+    return out

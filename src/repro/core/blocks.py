@@ -1,0 +1,233 @@
+"""TPU-native two-level kernel sampler (DESIGN.md §2.2–2.4).
+
+The paper's divide-and-conquer tree, taken to the branching-factor limit that
+suits a systolic machine: ONE dense root step that scores every block with a
+single contraction, then ONE exact leaf step inside the sampled blocks.  The
+math is identical (the telescoping-product correctness argument of §3.2.1
+holds for any fixed partition), only the schedule changes.
+
+Two sampling modes:
+  * per-example (paper-faithful): each query h draws its own negatives.
+  * batch-shared (beyond-paper, DESIGN.md §2.3): one negative set per batch,
+    drawn from the batch-summed kernel  Q_i = sum_p K(h_p, w_i)  which factors
+    through the SAME Gram statistics via a Frobenius product — so sampling
+    cost is independent of the number of positions.
+
+Both modes report the exact log-probabilities actually used, so the sampled
+softmax correction (eq. 2) remains exact even with stale statistics.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernel_fns import SamplingKernel
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BlockStats:
+    """Statistics for the two-level hierarchy.
+
+    z:       (n_blocks, r, r) per-block Gram sums  (fp32).
+    cnt:     (n_blocks,) number of real (non-padding) classes per block.
+    wq:      (n_blocks, block, r) sampling copy of class embeddings (projected
+             if proj was given; zero rows for padding).
+    n_valid: scalar int32 — number of real classes.  Dynamic so that sharded
+             tables whose last shard carries padding rows keep exactly-zero
+             probability on the pads (runtime-masked).
+    """
+
+    z: Array
+    cnt: Array
+    wq: Array
+    n_valid: Array
+
+    @property
+    def n_blocks(self) -> int:
+        return self.z.shape[0]
+
+    @property
+    def block_size(self) -> int:
+        return self.wq.shape[1]
+
+    @property
+    def n_pad(self) -> int:
+        return self.n_blocks * self.block_size
+
+
+def _project(w: Array, proj: Array | None) -> Array:
+    w32 = w.astype(jnp.float32)
+    if proj is None:
+        return w32
+    return w32 @ proj.astype(jnp.float32).T
+
+
+def make_projection(key: Array, d: int, r: int) -> Array:
+    """JL random projection (r, d), rows scaled so dots are preserved in
+    expectation: P_ij ~ N(0, 1/r)."""
+    return jax.random.normal(key, (r, d), jnp.float32) / jnp.sqrt(r)
+
+
+def build(w: Array, block_size: int, proj: Array | None = None,
+          n_valid: Array | int | None = None) -> BlockStats:
+    """(Re)build all block statistics with one batched matmul.
+
+    This is the dense-update analogue of the paper's path refresh
+    (DESIGN.md §2.4): cost O(n d r + n r^2 / block) — far below one fwd/bwd.
+    ``n_valid``: number of real classes (rows beyond it must be zero); may be
+    a traced scalar for sharded tables with padding rows.
+    """
+    n_rows, _ = w.shape
+    if n_valid is None:
+        n_valid = n_rows
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    wq = _project(w, proj)
+    r = wq.shape[-1]
+    n_blocks = -(-n_rows // block_size)
+    pad = n_blocks * block_size - n_rows
+    wq = jnp.pad(wq, ((0, pad), (0, 0)))
+    # Runtime-zero any rows at/after n_valid (pads must carry no mass).
+    row_ok = jnp.arange(n_blocks * block_size) < n_valid
+    wq = jnp.where(row_ok[:, None], wq, 0.0).reshape(n_blocks, block_size, r)
+    z = jnp.einsum("nbi,nbj->nij", wq, wq)
+    cnt = jnp.clip(
+        n_valid.astype(jnp.float32)
+        - jnp.arange(n_blocks, dtype=jnp.float32) * block_size,
+        0.0, float(block_size))
+    return BlockStats(z, cnt, wq, n_valid)
+
+
+def update_rows(stats: BlockStats, ids: Array, w_new: Array,
+                proj: Array | None = None) -> BlockStats:
+    """Sparse refresh (paper Fig. 1b): scatter Delta(w w^T) into touched
+    blocks.  ids must be unique.  Cost O(k r^2)."""
+    wq_new = _project(w_new, proj)
+    blk = ids // stats.block_size
+    off = ids % stats.block_size
+    wq_old = stats.wq[blk, off]
+    delta = (jnp.einsum("ki,kj->kij", wq_new, wq_new)
+             - jnp.einsum("ki,kj->kij", wq_old, wq_old))
+    z = stats.z.at[blk].add(delta)
+    wq = stats.wq.at[blk, off].set(wq_new)
+    return BlockStats(z, stats.cnt, wq, stats.n_valid)
+
+
+def _block_logits_single(kernel: SamplingKernel, stats: BlockStats,
+                         hq: Array) -> Array:
+    """log block masses for one query: log(alpha h^T Z_b h + cnt_b)."""
+    quad = jnp.einsum("nij,i,j->n", stats.z, hq, hq)
+    mass = kernel.alpha * quad + stats.cnt
+    return jnp.log(jnp.maximum(mass, 1e-30))
+
+
+def _within_block_logits(kernel: SamplingKernel, stats: BlockStats,
+                         hq: Array, blk: Array) -> Array:
+    """Exact kernel log-scores inside blocks blk: (m,) -> (m, block)."""
+    rows = stats.wq[blk]  # (m, block, r)
+    scores = kernel.of_dot(jnp.einsum("mbr,r->mb", rows, hq))
+    ids = blk[:, None] * stats.block_size + jnp.arange(stats.block_size)
+    scores = jnp.where(ids < stats.n_valid, scores, 0.0)
+    return jnp.where(scores > 0, jnp.log(jnp.maximum(scores, 1e-30)), -jnp.inf)
+
+
+def sample(stats: BlockStats, kernel: SamplingKernel, h: Array, m: int,
+           key: Array, proj: Array | None = None) -> tuple[Array, Array]:
+    """Per-example sampling: m i.i.d. draws for one query h: (d,).
+
+    Root: one contraction over all blocks (shared by all m draws).
+    Leaf: exact scores inside each draw's block.
+    Returns (ids: (m,), logq: (m,)) with exact log-probabilities.
+    """
+    hq = _project(h[None], proj)[0]
+    k_blk, k_in = jax.random.split(key)
+    blk_logits = _block_logits_single(kernel, stats, hq)
+    log_p_blk = jax.nn.log_softmax(blk_logits)
+    blk = jax.random.categorical(k_blk, blk_logits, shape=(m,))
+    within_logits = _within_block_logits(kernel, stats, hq, blk)
+    within = jax.random.categorical(k_in, within_logits, axis=-1)
+    log_p_within = jnp.take_along_axis(
+        jax.nn.log_softmax(within_logits, axis=-1), within[:, None], axis=-1
+    )[:, 0]
+    ids = blk * stats.block_size + within
+    return ids.astype(jnp.int32), log_p_blk[blk] + log_p_within
+
+
+def batch_context_gram(h: Array) -> tuple[Array, Array]:
+    """Context Gram for batch-shared sampling: (sum_p h_p h_p^T, T).
+
+    h: (T, d) raw (unprojected) hidden states."""
+    h32 = h.astype(jnp.float32)
+    return jnp.einsum("ti,tj->ij", h32, h32), jnp.asarray(h.shape[0],
+                                                          jnp.float32)
+
+
+def sample_shared(stats: BlockStats, kernel: SamplingKernel, h: Array, m: int,
+                  key: Array, proj: Array | None = None
+                  ) -> tuple[Array, Array]:
+    """Batch-shared sampling from the batch-summed kernel (DESIGN.md §2.3).
+
+    h: (T, d) all hidden states of the local batch.  Draws ONE set of m
+    negatives with probabilities  q_i ∝ sum_p K(h_p, w_i)  — exactly
+    computable through the same Gram statistics:
+
+      block mass:  alpha * <Z_b, Hq>_F + T * cnt_b          (one contraction)
+      leaf score:  alpha * wq^T Hq wq + T = alpha*||L^T wq||^2 + T
+                   with Hq = L L^T the (projected) context Gram.
+
+    Returns (ids: (m,), logq: (m,)).
+    """
+    hq = _project(h, proj)  # (T, r)
+    t = jnp.asarray(h.shape[0], jnp.float32)
+    hh = jnp.einsum("ti,tj->ij", hq, hq)  # (r, r) context Gram
+
+    k_blk, k_in = jax.random.split(key)
+    frob = jnp.einsum("nij,ij->n", stats.z, hh)
+    mass = kernel.alpha * frob + t * stats.cnt
+    blk_logits = jnp.log(jnp.maximum(mass, 1e-30))
+    log_p_blk = jax.nn.log_softmax(blk_logits)
+    blk = jax.random.categorical(k_blk, blk_logits, shape=(m,))
+
+    # Exact within-block scores: alpha * w^T HH w + T, via rows @ HH.
+    rows = stats.wq[blk]  # (m, block, r)
+    quad = jnp.einsum("mbr,rs,mbs->mb", rows, hh, rows)
+    scores = kernel.alpha * quad + t
+    ids_grid = blk[:, None] * stats.block_size + jnp.arange(stats.block_size)
+    scores = jnp.where(ids_grid < stats.n_valid, scores, 0.0)
+    within_logits = jnp.where(scores > 0,
+                              jnp.log(jnp.maximum(scores, 1e-30)), -jnp.inf)
+    within = jax.random.categorical(k_in, within_logits, axis=-1)
+    log_p_within = jnp.take_along_axis(
+        jax.nn.log_softmax(within_logits, axis=-1), within[:, None], axis=-1
+    )[:, 0]
+    ids = blk * stats.block_size + within
+    return ids.astype(jnp.int32), log_p_blk[blk] + log_p_within
+
+
+def all_class_logq(stats: BlockStats, kernel: SamplingKernel, h: Array,
+                   proj: Array | None = None, shared: bool = False) -> Array:
+    """Exact log-probability of every class under the two-level sampler
+    (test oracle, O(n r) / O(n r^2))."""
+    if shared:
+        hq = _project(h, proj)
+        t = jnp.asarray(h.shape[0], jnp.float32)
+        hh = jnp.einsum("ti,tj->ij", hq, hq)
+        frob = jnp.einsum("nij,ij->n", stats.z, hh)
+        mass = kernel.alpha * frob + t * stats.cnt
+        quad = jnp.einsum("nbr,rs,nbs->nb", stats.wq, hh, stats.wq)
+        scores = kernel.alpha * quad + t
+    else:
+        hq = _project(h[None], proj)[0]
+        mass = kernel.alpha * jnp.einsum("nij,i,j->n", stats.z, hq, hq) + stats.cnt
+        scores = kernel.of_dot(jnp.einsum("nbr,r->nb", stats.wq, hq))
+    log_p_blk = jax.nn.log_softmax(jnp.log(jnp.maximum(mass, 1e-30)))
+    ids = (jnp.arange(stats.n_blocks)[:, None] * stats.block_size
+           + jnp.arange(stats.block_size)[None, :])
+    scores = jnp.where(ids < stats.n_valid, scores, 0.0)
+    logit = jnp.where(scores > 0, jnp.log(jnp.maximum(scores, 1e-30)), -jnp.inf)
+    log_within = jax.nn.log_softmax(logit, axis=-1)
+    return (log_p_blk[:, None] + log_within).reshape(-1)

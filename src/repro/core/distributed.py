@@ -1,0 +1,169 @@
+"""Vocab-sharded kernel sampling + sampled-softmax loss (DESIGN.md §2.5).
+
+The class-embedding table (LM head) is sharded over the tensor-parallel mesh
+axis.  The paper's tree maps onto hardware: the top log2(tp) levels of the
+divide & conquer hierarchy ARE the shard index.  We use the *stratified* form:
+every shard draws m/tp negatives from its local kernel distribution, and the
+expected-occurrence correction uses the exact global probabilities
+q~_i = q_local(i) / tp — so E[count_i] = m * q~_i and eq. 2 applies verbatim.
+Stratification removes all cross-shard sampling traffic and is a
+variance-reduction over one global multinomial (documented beyond-paper
+change; see EXPERIMENTS.md §Perf).
+
+All functions here are written to run INSIDE ``jax.shard_map`` with a named
+tensor-parallel axis; they only communicate through psum/pmax of scalars or
+(T,)-vectors — never through gathered logits.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.sampled_softmax import transform_logits
+from repro.core.samplers import Sampler
+
+Array = jax.Array
+
+
+def local_vocab_offset(n_local: int, axis_name: str) -> Array:
+    return lax.axis_index(axis_name) * n_local
+
+
+def sharded_negative_sample(sampler: Sampler, state_local: Any, h: Array,
+                            m: int, key: Array, axis_name: str
+                            ) -> tuple[Array, Array]:
+    """Stratified sampling: each shard draws m/tp from its local distribution.
+
+    Returns LOCAL ids (.., m_local) and the GLOBAL log q~ for them.
+    """
+    tp = int(lax.psum(1, axis_name))
+    assert m % tp == 0, f"m={m} must divide by the TP degree {tp}"
+    m_local = m // tp
+    key_local = jax.random.fold_in(key, lax.axis_index(axis_name))
+    ids, logq_local = sampler.sample_batch(state_local, h, m_local, key_local)
+    # q~_i = q_local(i) / tp  (global stratified probability)
+    return ids, logq_local - jnp.log(jnp.asarray(tp, jnp.float32))
+
+
+def _positive_logit(w_local: Array, h: Array, labels: Array, axis_name: str,
+                    bias_local: Array | None = None) -> Array:
+    """Logit of each example's positive class, summed across shards.
+
+    Exactly one shard owns each label; the others contribute zero."""
+    n_local = w_local.shape[0]
+    off = local_vocab_offset(n_local, axis_name)
+    local = (labels >= off) & (labels < off + n_local)
+    idx = jnp.clip(labels - off, 0, n_local - 1)
+    w_pos = w_local[idx].astype(jnp.float32)  # (T, d)
+    logit = jnp.einsum("td,td->t", h.astype(jnp.float32), w_pos)
+    if bias_local is not None:
+        logit = logit + bias_local[idx]
+    logit = jnp.where(local, logit, 0.0)
+    return lax.psum(logit, axis_name)
+
+
+def sharded_sampled_softmax_loss(
+    w_local: Array, h: Array, labels: Array, sampler: Sampler,
+    state_local: Any, m: int, key: Array, *, axis_name: str,
+    abs_mode: bool = False, bias_local: Array | None = None) -> Array:
+    """Sampled softmax over a vocab-sharded head, negatives sampled in place.
+
+    w_local: (n/tp, d) local head shard.  h: (T, d) hidden states (replicated
+    across the TP axis).  labels: (T,) GLOBAL class ids.  m: total negatives
+    across shards (must divide by tp).  Returns per-example loss (T,).
+
+    No tensor of size (T, n) is ever materialized; cross-shard communication
+    is two psums of (T,)-vectors and one pmax.
+    """
+    h32 = h.astype(jnp.float32)
+    tp_static = None  # resolved inside by psum(1)
+
+    neg_ids, logq = sharded_negative_sample(sampler, state_local, h, m, key,
+                                            axis_name)
+    w_neg = w_local[neg_ids].astype(jnp.float32)
+    if neg_ids.ndim == 1:  # batch-shared negatives: (m_local, d)
+        o_neg = jnp.einsum("td,md->tm", h32, w_neg)
+        logq_b = jnp.broadcast_to(logq[None, :], o_neg.shape)
+        nb = neg_ids[None, :]
+    else:  # per-example negatives: (T, m_local, d)
+        o_neg = jnp.einsum("td,tmd->tm", h32, w_neg)
+        logq_b = logq
+        nb = neg_ids
+    if bias_local is not None:
+        o_neg = o_neg + bias_local[nb]
+
+    m_local = o_neg.shape[-1]
+    pos = transform_logits(
+        _positive_logit(w_local, h, labels, axis_name, bias_local), abs_mode)
+    # eq. 2 with stratified correction: E[count] = m_local * q_local = m * q~.
+    o_adj = (transform_logits(o_neg, abs_mode) - logq_b
+             - jnp.log(jnp.asarray(m, jnp.float32)))
+
+    # Numerically stable global logsumexp over [pos, all shards' negatives].
+    # The shift constant needs no gradient (it cancels analytically).
+    local_max = lax.stop_gradient(jnp.max(o_adj, axis=-1))
+    c = lax.pmax(jnp.maximum(local_max, lax.stop_gradient(pos)), axis_name)
+    sumexp_local = jnp.sum(jnp.exp(o_adj - c[:, None]), axis=-1)
+    sumexp = lax.psum(sumexp_local, axis_name) + jnp.exp(pos - c)
+    return jnp.log(sumexp) + c - pos
+
+
+def sharded_full_softmax_loss(w_local: Array, h: Array, labels: Array, *,
+                              axis_name: str, abs_mode: bool = False,
+                              bias_local: Array | None = None) -> Array:
+    """Reference/eval loss: full softmax over the sharded vocab.
+
+    Materializes only (T, n/tp) logits per shard."""
+    logits = jnp.einsum("td,nd->tn", h.astype(jnp.float32),
+                        w_local.astype(jnp.float32))
+    if bias_local is not None:
+        logits = logits + bias_local[None, :]
+    logits = transform_logits(logits, abs_mode)
+    local_max = lax.stop_gradient(jnp.max(logits, axis=-1))
+    c = lax.pmax(local_max, axis_name)
+    sumexp = lax.psum(jnp.sum(jnp.exp(logits - c[:, None]), axis=-1),
+                      axis_name)
+    pos = _positive_logit(w_local, h, labels, axis_name, bias_local)
+    return jnp.log(sumexp) + c - transform_logits(pos, abs_mode)
+
+
+def sharded_logits_argmax(w_local: Array, h: Array, *, axis_name: str,
+                          bias_local: Array | None = None
+                          ) -> tuple[Array, Array]:
+    """Greedy decode over a sharded head: global (argmax id, max logit).
+
+    Communication: one pmax of (T,) + one psum of (T,) masked ids."""
+    logits = jnp.einsum("td,nd->tn", h.astype(jnp.float32),
+                        w_local.astype(jnp.float32))
+    if bias_local is not None:
+        logits = logits + bias_local[None, :]
+    n_local = w_local.shape[0]
+    off = local_vocab_offset(n_local, axis_name)
+    local_best = jnp.max(logits, axis=-1)
+    local_arg = jnp.argmax(logits, axis=-1).astype(jnp.int32) + off
+    best = lax.pmax(local_best, axis_name)
+    # Break ties toward the lowest shard by masking non-winners to 0 and
+    # taking the min over winners via psum of one-hot-selected ids.
+    is_winner = local_best >= best
+    candidate = jnp.where(is_winner, local_arg, jnp.iinfo(jnp.int32).max)
+    winner_id = lax.pmin(candidate, axis_name)
+    return winner_id, best
+
+
+def sharded_partition_diagnostics(state_local: Any, sampler: Sampler,
+                                  h: Array, *, axis_name: str) -> Array:
+    """Per-shard share of the global kernel mass (load-balance telemetry).
+
+    Uses the root-level Gram statistics: rho_s = sum_b alpha h^T Z_b h + n_s,
+    normalized across shards.  Shape (T,) fraction owned by this shard."""
+    stats = state_local["stats"]
+    proj = state_local.get("proj")
+    hq = h.astype(jnp.float32)
+    if proj is not None:
+        hq = hq @ proj.T
+    quad = jnp.einsum("nij,ti,tj->tn", stats.z, hq, hq)
+    mass = jnp.sum(sampler.kernel.alpha * quad + stats.cnt[None, :], axis=-1)
+    return mass / lax.psum(mass, axis_name)

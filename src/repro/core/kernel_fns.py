@@ -1,0 +1,125 @@
+"""Kernel functions for kernel-based sampling (paper §3.1, §3.3).
+
+A sampling kernel is a non-negative function ``K(h, w) = f(<h, w>)`` with a
+feature map ``phi`` such that ``K(a, b) = <phi(a), phi(b)>``.  The key property
+(eq. 8 of the paper) is that the partition function factors through
+query-independent summary statistics ``z(C) = sum_{j in C} phi(w_j)``.
+
+For the quadratic kernel ``K = alpha*<h,w>^2 + 1`` the summary statistic of a
+class set C is realized NOT as an abstract D = d^2+1 vector but as the Gram-sum
+matrix ``Z_C = sum_{j in C} w_j w_j^T`` plus the count ``|C|``:
+
+    <phi(h), z(C)> = alpha * h^T Z_C h + |C|
+
+which is the TPU-native form used throughout (DESIGN.md §2.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingKernel:
+    """A kernel of the form K(a, b) = f(<a, b>), f >= 0.
+
+    Attributes:
+      name: identifier used in configs / logs.
+      of_dot: f, applied to raw dot products.  Must be non-negative.
+      degree: polynomial degree of f (2 for quadratic, 4 for quartic); used to
+        decide whether Gram-matrix summary statistics are exact (degree 2) or
+        an upper-level approximation must fall back to exact scoring.
+      alpha: scale inside f (kept for reporting; already baked into of_dot).
+    """
+
+    name: str
+    of_dot: Callable[[Array], Array]
+    degree: int
+    alpha: float
+
+    def pair_scores(self, h: Array, w: Array) -> Array:
+        """K(h, w_j) for h: (..., d) against w: (n, d) -> (..., n)."""
+        dots = jnp.einsum("...d,nd->...n", h, w)
+        return self.of_dot(dots)
+
+    def phi(self, a: Array) -> Array:
+        """Explicit feature map (test-scale only: D grows as d**degree)."""
+        if self.degree == 2:
+            outer = jnp.einsum("...i,...j->...ij", a, a)
+            flat = outer.reshape(*a.shape[:-1], -1)
+            return jnp.concatenate(
+                [jnp.sqrt(jnp.asarray(self.alpha, a.dtype)) * flat,
+                 jnp.ones((*a.shape[:-1], 1), a.dtype)], axis=-1)
+        raise NotImplementedError(
+            f"explicit phi only provided for degree-2 kernels, not {self.name}")
+
+
+def quadratic_kernel(alpha: float = 100.0) -> SamplingKernel:
+    """The paper's suggested kernel: K = alpha * t^2 + 1  (§3.3, §4.1.2)."""
+    return SamplingKernel(
+        name=f"quadratic(alpha={alpha:g})",
+        of_dot=lambda t: alpha * jnp.square(t) + 1.0,
+        degree=2,
+        alpha=alpha,
+    )
+
+
+def quartic_kernel(alpha: float = 1.0) -> SamplingKernel:
+    """4th-degree polynomial kernel q_i ∝ alpha * t^4 + 1 (paper Fig. 2, PTB).
+
+    The paper evaluates this sampler statistically; its feature space is
+    D = O(d^4), so summary statistics are only practical in a (projected)
+    low-rank space.  We expose it for oracle sampling and for the two-level
+    sampler's exact leaf scoring.
+    """
+    return SamplingKernel(
+        name=f"quartic(alpha={alpha:g})",
+        of_dot=lambda t: alpha * jnp.square(jnp.square(t)) + 1.0,
+        degree=4,
+        alpha=alpha,
+    )
+
+
+# --- Gram-sum summary statistics (quadratic kernel; DESIGN.md §2.1) ---------
+
+
+def gram_stats(w: Array) -> tuple[Array, Array]:
+    """Summary statistics of a class set: (Z = sum w w^T, count).
+
+    w: (B, d) block of class embeddings (zero rows = padding; they contribute
+    nothing to Z and must not be counted by the caller).
+    Returns Z: (d, d) fp32 and cnt scalar placeholder (caller supplies the
+    true count when padding is present).
+    """
+    w32 = w.astype(jnp.float32)
+    z = jnp.einsum("bi,bj->ij", w32, w32)
+    return z, jnp.asarray(w.shape[0], jnp.float32)
+
+
+def gram_set_mass(kernel: SamplingKernel, z: Array, cnt: Array, h: Array) -> Array:
+    """<phi(h), z(C)> = alpha * h^T Z h + |C| for the quadratic kernel.
+
+    z: (..., d, d), cnt: (...,), h: (d,) -> (...,) total kernel mass of the set.
+    Only exact for degree-2 kernels; callers must check kernel.degree.
+    """
+    assert kernel.degree == 2, "Gram stats are exact only for quadratic kernels"
+    h32 = h.astype(jnp.float32)
+    quad = jnp.einsum("...ij,i,j->...", z, h32, h32)
+    return kernel.alpha * quad + cnt
+
+
+def gram_set_mass_batch(kernel: SamplingKernel, z: Array, cnt: Array,
+                        hh: Array, total: Array) -> Array:
+    """Batch-summed set mass: sum_p <phi(h_p), z(C)> = alpha*<Z, H>_F + T*|C|.
+
+    hh: (d, d) = sum_p h_p h_p^T (the context Gram), total: scalar number of
+    contexts T.  Exact for the quadratic kernel (DESIGN.md §2.3).
+    """
+    assert kernel.degree == 2
+    frob = jnp.einsum("...ij,ij->...", z, hh)
+    return kernel.alpha * frob + total * cnt

@@ -1,0 +1,126 @@
+"""Sampled softmax with expected-occurrence correction (paper §2.2) and the
+absolute-softmax prediction distribution (paper §3.3).
+
+Conventions:
+  * one positive class per example (as the paper assumes w.l.o.g.);
+  * negatives are sampled WITH replacement from a known distribution q and the
+    logit of a sampled negative is corrected as  o' = o - ln(m * q)   (eq. 2);
+  * the loss is the cross entropy over the m+1 adjusted logits       (eq. 3);
+  * ``abs_mode`` applies |.| to the raw logits before anything else — the
+    paper's absolute softmax (eq. 11), recommended when sampling from a
+    symmetric kernel such as the quadratic one.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def transform_logits(o: Array, abs_mode: bool) -> Array:
+    """Prediction-distribution transform: identity or |o| (paper eq. 11)."""
+    return jnp.abs(o) if abs_mode else o
+
+
+def adjust_neg_logits(o_neg: Array, logq: Array, m: int) -> Array:
+    """eq. 2:  o'_i = o_i - ln(m q_i)  for sampled negatives."""
+    return o_neg - (logq + jnp.log(jnp.asarray(m, o_neg.dtype)))
+
+
+def sampled_softmax_loss(pos_logit: Array, neg_logits: Array, logq: Array,
+                         *, abs_mode: bool = False) -> Array:
+    """Cross entropy over [positive, m corrected negatives]  (eq. 3).
+
+    pos_logit:  (...,) raw logit of the positive class.
+    neg_logits: (..., m) raw logits of the sampled negatives (broadcastable
+                against pos_logit[..., None] — a shared (m,) negative set
+                broadcasts across the batch).
+    logq:       (..., m) exact log sampling probabilities of the negatives.
+    Returns per-example loss (...,).
+    """
+    m = neg_logits.shape[-1]
+    pos = transform_logits(pos_logit, abs_mode)
+    neg = adjust_neg_logits(transform_logits(neg_logits, abs_mode), logq, m)
+    pos_b = jnp.broadcast_to(pos[..., None], (*neg.shape[:-1], 1))
+    all_logits = jnp.concatenate([pos_b, neg], axis=-1)
+    return jax.nn.logsumexp(all_logits, axis=-1) - pos
+
+
+def sampled_softmax_from_embeddings(
+    w: Array, h: Array, labels: Array, neg_ids: Array, logq: Array,
+    *, abs_mode: bool = False, bias: Array | None = None) -> Array:
+    """Convenience wrapper computing logits from the class-embedding table.
+
+    w: (n, d) class embeddings; h: (T, d) hidden states; labels: (T,);
+    neg_ids/logq: (T, m) per-example or (m,) shared negatives.
+    Returns per-example loss (T,).
+    """
+    h = h.astype(jnp.float32)
+    w_pos = w[labels].astype(jnp.float32)  # (T, d)
+    pos_logit = jnp.einsum("td,td->t", h, w_pos)
+    if neg_ids.ndim == 1:  # shared negatives
+        w_neg = w[neg_ids].astype(jnp.float32)  # (m, d)
+        neg_logits = jnp.einsum("td,md->tm", h, w_neg)
+        logq = jnp.broadcast_to(logq[None, :], neg_logits.shape)
+    else:
+        w_neg = w[neg_ids].astype(jnp.float32)  # (T, m, d)
+        neg_logits = jnp.einsum("td,tmd->tm", h, w_neg)
+    if bias is not None:
+        pos_logit = pos_logit + bias[labels]
+        neg_logits = neg_logits + bias[neg_ids]
+    return sampled_softmax_loss(pos_logit, neg_logits, logq,
+                                abs_mode=abs_mode)
+
+
+def full_softmax_loss(w: Array, h: Array, labels: Array,
+                      *, abs_mode: bool = False,
+                      bias: Array | None = None) -> Array:
+    """Reference full softmax cross entropy (eq. 1). O(n d) per example."""
+    logits = jnp.einsum("td,nd->tn", h.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    if bias is not None:
+        logits = logits + bias[None, :]
+    logits = transform_logits(logits, abs_mode)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    pos = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return lse - pos
+
+
+def full_softmax_grad_wrt_logits(o: Array, labels: Array,
+                                 *, abs_mode: bool = False) -> Array:
+    """dL/do = p - y (eq. 4), with the |.| chain rule in abs mode.
+
+    Test oracle for the unbiasedness property (Theorem 2.1)."""
+    t = transform_logits(o, abs_mode)
+    p = jax.nn.softmax(t, axis=-1)
+    y = jax.nn.one_hot(labels, o.shape[-1], dtype=p.dtype)
+    g = p - y
+    if abs_mode:
+        g = g * jnp.sign(o)
+    return g
+
+
+def sampled_softmax_grad_wrt_logits(o: Array, labels: Array, neg_ids: Array,
+                                    logq: Array, *, n: int,
+                                    abs_mode: bool = False) -> Array:
+    """eq. 5: scatter of (p' - y') onto the original logit vector.
+
+    o: (n,) full logits of ONE example (test oracle only); neg_ids/logq: (m,).
+    Returns the estimator of dL/do: (n,)."""
+    m = neg_ids.shape[-1]
+    pos_logit = o[labels]
+    neg_logits = o[neg_ids]
+    pos_t = transform_logits(pos_logit, abs_mode)
+    neg_t = adjust_neg_logits(transform_logits(neg_logits, abs_mode), logq, m)
+    all_logits = jnp.concatenate([pos_t[None], neg_t])
+    p_prime = jax.nn.softmax(all_logits)
+    grad = jnp.zeros(n)
+    if abs_mode:
+        signs = jnp.sign(jnp.concatenate([pos_logit[None], neg_logits]))
+        p_prime = p_prime * signs
+        grad = grad.at[labels].add(-jnp.sign(pos_logit))
+    else:
+        grad = grad.at[labels].add(-1.0)
+    ids = jnp.concatenate([labels[None], neg_ids])
+    return grad.at[ids].add(p_prime)

@@ -1,0 +1,263 @@
+"""Unified negative-sampler interface + all distributions studied in the paper.
+
+Samplers are stateless objects; their mutable statistics live in an explicit
+pytree ``state`` so everything jits/vmaps/shards cleanly:
+
+    state = sampler.init(key, w)
+    state = sampler.refresh(state, w)          # adapt to current parameters
+    ids, logq = sampler.sample(state, h, m, key)        # one query  (m,)
+    ids, logq = sampler.sample_batch(state, H, m, key)  # (T, m) or shared (m,)
+
+``logq`` is always the EXACT log-probability under the distribution actually
+sampled from — that is what eq. 2 needs, and it is what keeps stale statistics
+correct rather than approximate (DESIGN.md §2.4).
+
+Distributions (paper §4.1.2 + Fig. 2):
+  uniform            q ∝ 1
+  unigram            q ∝ class frequency
+  bigram             q ∝ P(class | previous class)          (small vocab only)
+  softmax (oracle)   q ∝ exp(o)          — the unique unbiased choice (Thm 2.1)
+  abs-softmax oracle q ∝ exp(|o|)
+  quadratic (oracle) q ∝ alpha o^2 + 1   — brute force, for bias studies
+  quartic (oracle)   q ∝ alpha o^4 + 1
+  tree-quadratic     paper §3.2 divide & conquer, O(D log n)
+  block-quadratic    TPU two-level form, optional low-rank projection and
+                     batch-shared mode (DESIGN.md §2.2–2.3)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocks, tree
+from repro.core.kernel_fns import SamplingKernel, quadratic_kernel, quartic_kernel
+
+Array = jax.Array
+
+
+class Sampler:
+    """Base class; subclasses override init/refresh/sample."""
+
+    name: str = "base"
+    #: True when sample_batch returns one shared (m,) set instead of (T, m).
+    shares_negatives: bool = False
+
+    def init(self, key: Array, w: Array) -> Any:
+        raise NotImplementedError
+
+    def refresh(self, state: Any, w: Array) -> Any:
+        return state
+
+    def sample(self, state: Any, h: Array, m: int, key: Array
+               ) -> tuple[Array, Array]:
+        raise NotImplementedError
+
+    def sample_batch(self, state: Any, h: Array, m: int, key: Array
+                     ) -> tuple[Array, Array]:
+        keys = jax.random.split(key, h.shape[0])
+        return jax.vmap(lambda hh, kk: self.sample(state, hh, m, kk))(h, keys)
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformSampler(Sampler):
+    name: str = "uniform"
+
+    def init(self, key, w):
+        return {"n": w.shape[0]}
+
+    def sample(self, state, h, m, key):
+        n = state["n"]  # static int or traced scalar — both fine
+        ids = jax.random.randint(key, (m,), 0, n, dtype=jnp.int32)
+        logq = -jnp.log(jnp.asarray(n, jnp.float32))
+        return ids, jnp.full((m,), 1.0) * logq
+
+
+@dataclasses.dataclass(frozen=True)
+class UnigramSampler(Sampler):
+    """q ∝ empirical class frequency (optionally distorted, as in word2vec)."""
+
+    distortion: float = 1.0
+    name: str = "unigram"
+
+    def init(self, key, w):
+        n = w.shape[0]
+        return {"logp": jnp.full((n,), -jnp.log(float(n)))}
+
+    def set_counts(self, state, counts: Array):
+        logits = self.distortion * jnp.log(counts.astype(jnp.float32) + 1.0)
+        return {"logp": jax.nn.log_softmax(logits)}
+
+    def sample(self, state, h, m, key):
+        logp = state["logp"]
+        ids = jax.random.categorical(key, logp, shape=(m,)).astype(jnp.int32)
+        return ids, logp[ids]
+
+
+@dataclasses.dataclass(frozen=True)
+class BigramSampler(Sampler):
+    """q ∝ P(class | prev class); dense (n, n) table — paper-scale vocab only.
+
+    ``sample`` treats h as carrying the previous class id via state binding;
+    use sample_ctx directly in experiments."""
+
+    name: str = "bigram"
+
+    def init(self, key, w):
+        n = w.shape[0]
+        assert n <= 65536, "dense bigram table is for paper-scale vocabs"
+        return {"logp": jnp.full((n, n), -jnp.log(float(n)))}
+
+    def set_counts(self, state, counts: Array):
+        logits = jnp.log(counts.astype(jnp.float32) + 1.0)
+        return {"logp": jax.nn.log_softmax(logits, axis=-1)}
+
+    def sample_ctx(self, state, prev_id: Array, m: int, key: Array):
+        logp = state["logp"][prev_id]
+        ids = jax.random.categorical(key, logp, shape=(m,)).astype(jnp.int32)
+        return ids, logp[ids]
+
+
+@dataclasses.dataclass(frozen=True)
+class LogitOracleSampler(Sampler):
+    """Brute-force sampler: computes ALL logits o = W h (O(nd)) and samples
+    from q ∝ score_fn(o).  The paper's softmax / quadratic / quartic
+    comparison points (Fig. 2) and the statistical test oracle."""
+
+    score_fn: Callable[[Array], Array] = jnp.exp
+    name: str = "oracle"
+
+    def init(self, key, w):
+        return {"w": w}
+
+    def refresh(self, state, w):
+        return {"w": w}
+
+    def logq_all(self, state, h):
+        o = state["w"].astype(jnp.float32) @ h.astype(jnp.float32)
+        s = self.score_fn(o)
+        if "n_valid" in state:  # mask padding rows of sharded tables
+            ok = jnp.arange(o.shape[0]) < state["n_valid"]
+            s = jnp.where(ok, s, 0.0)
+        return jnp.log(jnp.maximum(s, 1e-30)) - jnp.log(jnp.sum(s))
+
+    def sample(self, state, h, m, key):
+        logq = self.logq_all(state, h)
+        ids = jax.random.categorical(key, logq, shape=(m,)).astype(jnp.int32)
+        return ids, logq[ids]
+
+
+def softmax_oracle() -> LogitOracleSampler:
+    return LogitOracleSampler(score_fn=jnp.exp, name="softmax")
+
+
+def abs_softmax_oracle() -> LogitOracleSampler:
+    return LogitOracleSampler(score_fn=lambda o: jnp.exp(jnp.abs(o)),
+                              name="abs-softmax")
+
+
+def quadratic_oracle(alpha: float = 100.0) -> LogitOracleSampler:
+    k = quadratic_kernel(alpha)
+    return LogitOracleSampler(score_fn=k.of_dot, name="quadratic-oracle")
+
+
+def quartic_oracle(alpha: float = 1.0) -> LogitOracleSampler:
+    k = quartic_kernel(alpha)
+    return LogitOracleSampler(score_fn=k.of_dot, name="quartic-oracle")
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeSampler(Sampler):
+    """Paper §3.2: divide & conquer over a binary tree of Gram statistics."""
+
+    kernel: SamplingKernel = dataclasses.field(
+        default_factory=quadratic_kernel)
+    leaf_size: int | None = None
+    proj_rank: int | None = None
+    name: str = "tree-quadratic"
+
+    def init(self, key, w):
+        proj = None
+        if self.proj_rank is not None:
+            proj = blocks.make_projection(key, w.shape[1], self.proj_rank)
+        return {"stats": tree.build(w, self.kernel, self.leaf_size, proj),
+                "proj": proj}
+
+    def refresh(self, state, w):
+        return {"stats": tree.build(w, self.kernel, self.leaf_size,
+                                    state["proj"]),
+                "proj": state["proj"]}
+
+    def update_rows(self, state, ids, w_new):
+        return {"stats": tree.update_path(state["stats"], self.kernel, ids,
+                                          w_new, state["proj"]),
+                "proj": state["proj"]}
+
+    def sample(self, state, h, m, key):
+        return tree.sample(state["stats"], self.kernel, h, m, key,
+                           state["proj"])
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSampler(Sampler):
+    """TPU two-level sampler (DESIGN.md §2.2).  shared=True draws one negative
+    set per batch from the batch-summed kernel (DESIGN.md §2.3)."""
+
+    kernel: SamplingKernel = dataclasses.field(
+        default_factory=quadratic_kernel)
+    block_size: int = 256
+    proj_rank: int | None = None
+    shared: bool = False
+    name: str = "block-quadratic"
+
+    @property
+    def shares_negatives(self) -> bool:  # type: ignore[override]
+        return self.shared
+
+    def init(self, key, w):
+        proj = None
+        if self.proj_rank is not None:
+            proj = blocks.make_projection(key, w.shape[1], self.proj_rank)
+        return {"stats": blocks.build(w, self.block_size, proj), "proj": proj}
+
+    def refresh(self, state, w):
+        return {"stats": blocks.build(w, self.block_size, state["proj"]),
+                "proj": state["proj"]}
+
+    def update_rows(self, state, ids, w_new):
+        return {"stats": blocks.update_rows(state["stats"], ids, w_new,
+                                            state["proj"]),
+                "proj": state["proj"]}
+
+    def sample(self, state, h, m, key):
+        return blocks.sample(state["stats"], self.kernel, h, m, key,
+                             state["proj"])
+
+    def sample_batch(self, state, h, m, key):
+        if self.shared:
+            return blocks.sample_shared(state["stats"], self.kernel, h, m,
+                                        key, state["proj"])
+        return super().sample_batch(state, h, m, key)
+
+
+_REGISTRY: dict[str, Callable[..., Sampler]] = {
+    "uniform": UniformSampler,
+    "unigram": UnigramSampler,
+    "bigram": BigramSampler,
+    "softmax": softmax_oracle,
+    "abs-softmax": abs_softmax_oracle,
+    "quadratic-oracle": quadratic_oracle,
+    "quartic-oracle": quartic_oracle,
+    "tree-quadratic": TreeSampler,
+    "block-quadratic": BlockSampler,
+    "block-quadratic-shared": partial(BlockSampler, shared=True),
+}
+
+
+def make_sampler(name: str, **kwargs) -> Sampler:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown sampler '{name}'; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)

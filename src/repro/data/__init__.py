@@ -1,0 +1,2 @@
+from repro.data.synthetic import SyntheticLM, SyntheticRecsys  # noqa: F401
+from repro.data.pipeline import ShardedBatchIterator, batch_iterator_for  # noqa: F401

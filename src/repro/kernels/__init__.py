@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+  zstats        — per-block Gram matrices  Z_b = W_b^T W_b  (stats refresh)
+  block_scores  — batched quadratic forms  alpha * h^T Z_b h + cnt  (root
+                  level of the two-level sampler)
+  sampled_loss  — fused corrected sampled-softmax loss: logits + eq. 2
+                  correction + online logsumexp, never materializing (T, m)
+                  logits in HBM
+  flash_attention — causal online-softmax attention (backbone hot spot)
+
+Each kernel ships with a pure-jnp oracle in ref.py and a jit wrapper in
+ops.py that runs interpret=True off-TPU (this container is CPU-only; the
+BlockSpec tiling targets TPU VMEM).
+"""

@@ -1,0 +1,108 @@
+"""Pallas kernel: causal flash attention (the backbone hot spot).
+
+Layout: q, k, v are (B*H, S, hd) (the ops.py wrapper folds batch x heads);
+grid is (B*H, q_tiles, kv_tiles) with the kv axis inner.  Running
+(max, sum, acc) live in VMEM scratch across kv tiles; causal tiles beyond
+the diagonal are skipped via pl.when (no wasted MXU work past the mask).
+Block sizes default to (128, 128) — MXU-shaped, and the (Sq_t, hd) +
+2*(Sk_t, hd) + (Sq_t, Sk_t) working set stays well under VMEM for
+hd <= 256.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(scale, causal, s_valid, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, s_scr, acc_scr):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], NEG_INF)
+        s_scr[...] = jnp.zeros_like(s_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    sq = q_ref.shape[1]
+    sk = k_ref.shape[1]
+
+    run = True
+    if causal:
+        # skip tiles strictly above the diagonal
+        run = (kj * sk) <= (qi * sq + sq - 1)
+
+    @pl.when(run if causal else True)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale      # (Sq_t, hd)
+        k = k_ref[0].astype(jnp.float32)              # (Sk_t, hd)
+        v = v_ref[0].astype(jnp.float32)              # (Sk_t, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (Sq_t, Sk_t)
+        q_pos = qi * sq + jax.lax.broadcasted_iota(
+            jnp.int32, (sq, sk), 0)
+        k_pos = kj * sk + jax.lax.broadcasted_iota(
+            jnp.int32, (sq, sk), 1)
+        ok = k_pos < s_valid  # padded KV rows carry no mass
+        if causal:
+            ok = ok & (k_pos <= q_pos)
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        s_scr[...] = s_scr[...] * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(s_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "q_tile", "kv_tile",
+                                    "s_valid", "interpret"))
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    q_tile: int = 128, kv_tile: int = 128,
+                    s_valid: int | None = None,
+                    interpret: bool = False) -> Array:
+    """q, k, v: (BH, S, hd) -> (BH, S, hd).  S % tiles == 0 (ops.py pads;
+    rows at/after s_valid are masked out of the softmax)."""
+    bh, s, hd = q.shape
+    s_valid = s_valid if s_valid is not None else s
+    assert s % q_tile == 0 and s % kv_tile == 0, (s, q_tile, kv_tile)
+    scale = 1.0 / np.sqrt(hd)
+    kernel = functools.partial(_flash_kernel, scale, causal, s_valid)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, s // q_tile, s // kv_tile),
+        in_specs=[
+            pl.BlockSpec((1, q_tile, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kv_tile, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kv_tile, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_tile, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_tile,), jnp.float32),
+            pltpu.VMEM((q_tile,), jnp.float32),
+            pltpu.VMEM((q_tile, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,100 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Handles padding to tile multiples, dtype policy, GQA head expansion, and
+backend dispatch: on TPU the kernels run compiled; elsewhere they run in
+interpret mode (the kernel body executes op-by-op on CPU — correctness
+validation only).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.block_scores import block_scores as _block_scores
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.sampled_loss import sampled_loss as _sampled_loss
+from repro.kernels.zstats import zstats as _zstats
+
+Array = jax.Array
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: Array, axis: int, mult: int):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def zstats(w: Array) -> Array:
+    """w: (n_blocks, B, r) -> (n_blocks, r, r) fp32 block Grams."""
+    return _zstats(w, interpret=_interpret())
+
+
+def block_scores(h: Array, z: Array, cnt: Array,
+                 alpha: float = 100.0) -> Array:
+    """h: (T, r); z: (N, r, r); cnt: (N,) -> (T, N) kernel masses."""
+    t_tile = min(128, max(8, 1 << (h.shape[0] - 1).bit_length()))
+    n_tile = min(8, z.shape[0])
+    hp, t = _pad_to(h, 0, t_tile)
+    zp, n = _pad_to(z, 0, n_tile)
+    cp, _ = _pad_to(cnt, 0, n_tile)
+    out = _block_scores(hp, zp, cp, alpha=alpha,
+                        t_tile=min(t_tile, hp.shape[0]),
+                        n_tile=n_tile, interpret=_interpret())
+    return out[:t, :n]
+
+
+def sampled_loss(h: Array, w_neg: Array, logq: Array, pos_logit: Array,
+                 m_total: int | None = None) -> Array:
+    """Fused corrected sampled-softmax loss, shared negatives.  -> (T,)."""
+    m = w_neg.shape[0]
+    m_total = m_total or m
+    t_tile = min(128, max(8, 1 << (h.shape[0] - 1).bit_length()))
+    m_tile = min(128, max(8, 1 << (m - 1).bit_length()))
+    hp, t = _pad_to(h, 0, t_tile)
+    pp, _ = _pad_to(pos_logit, 0, t_tile)
+    wp, _ = _pad_to(w_neg, 0, m_tile)
+    # padded negatives must contribute zero mass: logq = +inf-ish correction
+    lp = jnp.pad(logq, (0, wp.shape[0] - m), constant_values=1e30)
+    out = _sampled_loss(hp, wp, lp, pp, m_total=m_total,
+                        t_tile=min(t_tile, hp.shape[0]),
+                        m_tile=min(m_tile, wp.shape[0]),
+                        interpret=_interpret())
+    return out[:t]
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    q_tile: int = 128, kv_tile: int = 128) -> Array:
+    """q: (B, S, H, hd); k, v: (B, S, KV, hd) GQA -> (B, S, H, hd)."""
+    b, s, h_heads, hd = q.shape
+    kv = k.shape[2]
+    group = h_heads // kv
+    if group > 1:  # expand KV heads to match (GQA)
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    qt = jnp.moveaxis(q, 2, 1).reshape(b * h_heads, s, hd)
+    kt = jnp.moveaxis(k, 2, 1).reshape(b * h_heads, s, hd)
+    vt = jnp.moveaxis(v, 2, 1).reshape(b * h_heads, s, hd)
+    q_tile = min(q_tile, s)
+    kv_tile = min(kv_tile, s)
+    qp, _ = _pad_to(qt, 1, q_tile)
+    kp, _ = _pad_to(kt, 1, kv_tile)
+    vp, _ = _pad_to(vt, 1, kv_tile)
+    sp = max(qp.shape[1], kp.shape[1])
+    qp, _ = _pad_to(qp, 1, sp)
+    kp, _ = _pad_to(kp, 1, sp)
+    vp, _ = _pad_to(vp, 1, sp)
+    out = _flash(qp, kp, vp, causal=causal, q_tile=q_tile, kv_tile=kv_tile,
+                 s_valid=s, interpret=_interpret())
+    out = out[:, :s]
+    return jnp.moveaxis(out.reshape(b, h_heads, s, hd), 1, 2)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def zstats_ref(w: Array) -> Array:
+    """w: (n_blocks, B, r) -> (n_blocks, r, r) fp32 Gram sums."""
+    w32 = w.astype(jnp.float32)
+    return jnp.einsum("nbi,nbj->nij", w32, w32)
+
+
+def block_scores_ref(h: Array, z: Array, cnt: Array, alpha: float) -> Array:
+    """h: (T, r); z: (N, r, r); cnt: (N,) -> (T, N) kernel masses."""
+    h32 = h.astype(jnp.float32)
+    quad = jnp.einsum("nij,ti,tj->tn", z.astype(jnp.float32), h32, h32)
+    return alpha * quad + cnt[None, :]
+
+
+def sampled_loss_ref(h: Array, w_neg: Array, logq: Array, pos_logit: Array,
+                     m_total: int) -> Array:
+    """Corrected sampled softmax with shared negatives (paper eq. 2-3).
+
+    h: (T, d); w_neg: (m, d); logq: (m,); pos_logit: (T,) -> loss (T,)."""
+    h32 = h.astype(jnp.float32)
+    o_neg = h32 @ w_neg.astype(jnp.float32).T  # (T, m)
+    o_adj = o_neg - logq[None, :] - np.log(m_total)
+    allx = jnp.concatenate([pos_logit[:, None].astype(jnp.float32), o_adj],
+                           axis=-1)
+    return jax.nn.logsumexp(allx, axis=-1) - pos_logit.astype(jnp.float32)
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, *, causal: bool
+                        ) -> Array:
+    """q,k,v: (B, S, H, hd) (MHA layout) -> (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

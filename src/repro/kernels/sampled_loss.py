@@ -1,0 +1,89 @@
+"""Pallas kernel: fused corrected sampled-softmax loss (paper eq. 2-3).
+
+loss_t = logsumexp([pos_t, h_t.W_neg^T - logq - log m]) - pos_t
+
+Shared-negative form: h: (T, d), w_neg: (m, d), logq: (m,), pos: (T,).
+Grid is (T tiles x m tiles) with the m axis INNER; a running online
+(max, sumexp) pair lives in VMEM scratch across the m tiles, so the (T, m)
+adjusted-logit matrix never exists in HBM — the same trick flash attention
+uses for its softmax, applied to the paper's loss.  The final m-step folds
+in the positive logit and writes the per-example loss tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _sampled_loss_kernel(log_m, h_ref, wn_ref, logq_ref, pos_ref, loss_ref,
+                         m_scr, s_scr):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], NEG_INF)
+        s_scr[...] = jnp.zeros_like(s_scr[...])
+
+    h = h_ref[...].astype(jnp.float32)          # (Tt, d)
+    wn = wn_ref[...].astype(jnp.float32)        # (Mt, d)
+    logq = logq_ref[...].astype(jnp.float32)    # (Mt,)
+    logits = jax.lax.dot_general(
+        h, wn, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (Tt, Mt)
+    adj = logits - logq[None, :] - log_m         # eq. 2 correction
+
+    m_prev = m_scr[...]
+    s_prev = s_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(adj, axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    s_new = s_prev * corr + jnp.sum(jnp.exp(adj - m_new[:, None]), axis=-1)
+    m_scr[...] = m_new
+    s_scr[...] = s_new
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        pos = pos_ref[...].astype(jnp.float32)   # (Tt,)
+        c = jnp.maximum(m_scr[...], pos)
+        total = s_scr[...] * jnp.exp(m_scr[...] - c) + jnp.exp(pos - c)
+        loss_ref[...] = jnp.log(total) + c - pos
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m_total", "t_tile", "m_tile",
+                                    "interpret"))
+def sampled_loss(h: Array, w_neg: Array, logq: Array, pos_logit: Array, *,
+                 m_total: int, t_tile: int = 128, m_tile: int = 128,
+                 interpret: bool = False) -> Array:
+    """Returns per-example loss (T,) fp32.  T % t_tile == m % m_tile == 0."""
+    t, d = h.shape
+    m = w_neg.shape[0]
+    assert t % t_tile == 0 and m % m_tile == 0, (t, m, t_tile, m_tile)
+    kernel = functools.partial(_sampled_loss_kernel,
+                               float(np.log(m_total)))
+    return pl.pallas_call(
+        kernel,
+        grid=(t // t_tile, m // m_tile),
+        in_specs=[
+            pl.BlockSpec((t_tile, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((m_tile, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((m_tile,), lambda i, j: (j,)),
+            pl.BlockSpec((t_tile,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((t_tile,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((t_tile,), jnp.float32),
+            pltpu.VMEM((t_tile,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(h, w_neg, logq, pos_logit)

@@ -1,0 +1,38 @@
+"""Pallas kernel: per-block Gram matrices  Z_b = W_b^T W_b.
+
+The statistics-refresh hot spot of the TPU two-level sampler (DESIGN.md
+§2.4): one MXU contraction per class block.  Grid over blocks; each step
+loads one (B, r) class-embedding block into VMEM and writes its (r, r)
+fp32 Gram.  B (block_size) and r are padded to MXU-friendly multiples of
+(8, 128) by the ops.py wrapper; the accumulation dtype is always fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _zstats_kernel(w_ref, z_ref):
+    w = w_ref[0].astype(jnp.float32)  # (B, r) VMEM tile
+    z_ref[0] = jax.lax.dot_general(
+        w, w, (((0,), (0,)), ((), ())),  # contract the class dim
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def zstats(w: Array, *, interpret: bool = False) -> Array:
+    """w: (n_blocks, B, r) -> (n_blocks, r, r) fp32."""
+    n_blocks, b, r = w.shape
+    return pl.pallas_call(
+        _zstats_kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((1, b, r), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, r, r), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, r, r), jnp.float32),
+        interpret=interpret,
+    )(w)

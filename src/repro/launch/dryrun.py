@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede any jax-importing module: jax locks the device count on
+# first init, and the production meshes below need 512 host placeholders.
+# flake8: noqa: E402
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape x mesh) cell this lowers + compiles
+the real jitted step (train_step for train shapes, prefill/decode steps for
+serving shapes) against ShapeDtypeStruct inputs with production shardings —
+no allocation — then records:
+
+  * compiled.memory_analysis()  — per-device argument/temp/peak bytes,
+  * compiled.cost_analysis()    — per-device HLO FLOPs & bytes accessed,
+  * the collective schedule     — parsed from compiled.as_text(): op counts
+    and operand bytes for all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute,
+
+into experiments/dryrun/<arch>__<shape>__<mesh>.json, which §Roofline reads.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh both
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, shapes_for
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.optim import make_optimizer
+from repro.serve.engine import (
+    abstract_decode_inputs,
+    abstract_prefill_inputs,
+    make_decode_step,
+    make_prefill_step,
+)
+from repro.sharding.rules import ctx_for_serve, ctx_for_train
+from repro.train.step import abstract_train_state, make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+#: archs where Adam moments would not fit HBM — use factored second moments
+ADAFACTOR_THRESHOLD = 15e9
+
+
+def _param_count(cfg, ctx) -> int:
+    struct = jax.eval_shape(
+        lambda k: api.init_params(k, cfg, ctx, max_len=128),
+        jax.random.PRNGKey(0))
+    return sum(int(np.prod(x.shape))
+               for x in jax.tree_util.tree_leaves(struct))
+
+
+def pick_optimizer(cfg, ctx):
+    n = _param_count(cfg, ctx)
+    name = "adafactor" if n > ADAFACTOR_THRESHOLD else "adamw"
+    return make_optimizer(name, 1e-4), name, n
+
+
+def analyze(lowered, compiled, mesh) -> dict:
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    corrected = analyze_hlo(txt)  # trip-count-aware (scan bodies x trips)
+    return {
+        "devices": int(np.prod(list(mesh.shape.values()))),
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes": int(getattr(ma, "peak_memory_in_bytes", 0)),
+        },
+        "cost": {
+            # raw XLA numbers (while bodies counted ONCE — kept for reference)
+            "flops_per_device_raw": float(ca.get("flops", 0.0)),
+            "bytes_accessed_per_device_raw": float(
+                ca.get("bytes accessed", 0.0)),
+            # trip-corrected (the numbers §Roofline uses)
+            "flops_per_device": float(corrected["flops"]),
+            "bytes_per_device": float(corrected["bytes"]),
+        },
+        "collectives": corrected["collectives"],
+        "structural_bytes_per_device": int(
+            ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + 2 * ma.temp_size_in_bytes),
+        "hlo_instructions": txt.count("\n"),
+    }
+
+
+# --------------------------------------------------------------------------
+# cell lowering
+# --------------------------------------------------------------------------
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    meta: dict = {"arch": arch, "shape": shape_name,
+                  "mesh": "2x16x16" if multi_pod else "16x16",
+                  "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+                  "kind": shape.kind}
+
+    with mesh:
+        if shape.kind == "train":
+            ctx = ctx_for_train(mesh, cfg)
+            meta["sharding"] = ctx.mode
+            opt, opt_name, n_params = pick_optimizer(cfg, ctx)
+            meta["optimizer"] = opt_name
+            meta["params"] = n_params
+            state_sds = abstract_train_state(cfg, ctx, opt,
+                                             max_len=shape.seq_len)
+            batch_specs = api.train_batch_specs(cfg, shape.global_batch,
+                                                shape.seq_len)
+            dsp = ctx.data_axes if len(ctx.data_axes) > 1 else \
+                ctx.data_axes[0]
+            batch_sds = jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(
+                    s.shape, s.dtype,
+                    sharding=NamedSharding(
+                        mesh, ctx.fit_spec(
+                            s.shape,
+                            P(dsp, *([None] * (len(s.shape) - 1)))))),
+                batch_specs)
+            key_sds = jax.ShapeDtypeStruct(
+                (2,), jnp.uint32, sharding=NamedSharding(mesh, P(None)))
+            step_fn = make_train_step(cfg, ctx, opt)
+            t0 = time.time()
+            lowered = jax.jit(step_fn, donate_argnums=(0,)).lower(
+                state_sds, batch_sds, key_sds)
+        elif shape.kind == "prefill":
+            ctx = ctx_for_serve(mesh, cfg)
+            meta["sharding"] = ctx.mode
+            params_sds, batch_sds = abstract_prefill_inputs(
+                cfg, ctx, shape.global_batch, shape.seq_len)
+            meta["params"] = sum(
+                int(np.prod(x.shape))
+                for x in jax.tree_util.tree_leaves(params_sds))
+            step_fn = make_prefill_step(cfg, ctx, max_len=shape.seq_len)
+            t0 = time.time()
+            lowered = jax.jit(step_fn).lower(params_sds, batch_sds)
+        else:  # decode
+            ctx = ctx_for_serve(mesh, cfg)
+            meta["sharding"] = ctx.mode
+            params_sds, tok_sds, cache_sds, pos_sds = abstract_decode_inputs(
+                cfg, ctx, shape.global_batch, shape.seq_len)
+            meta["params"] = sum(
+                int(np.prod(x.shape))
+                for x in jax.tree_util.tree_leaves(params_sds))
+            step_fn = make_decode_step(cfg, ctx)
+            t0 = time.time()
+            lowered = jax.jit(step_fn, donate_argnums=(2,)).lower(
+                params_sds, tok_sds, cache_sds, pos_sds)
+        meta["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        meta["compile_s"] = round(time.time() - t1, 1)
+    return lowered, compiled, mesh, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str) -> dict:
+    lowered, compiled, mesh, meta = lower_cell(arch, shape_name, multi_pod)
+    print(compiled.memory_analysis())
+    ca = compiled.cost_analysis() or {}
+    print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
+    rec = {**meta, **analyze(lowered, compiled, mesh)}
+    os.makedirs(out_dir, exist_ok=True)
+    fn = os.path.join(out_dir,
+                      f"{arch}__{shape_name}__{meta['mesh']}.json")
+    with open(fn, "w") as f:
+        json.dump(rec, f, indent=1)
+    mem_gib = rec["memory"]["peak_bytes"] / 2**30
+    arg_gib = rec["memory"]["argument_bytes"] / 2**30
+    tf = rec["cost"]["flops_per_device"] / 1e12
+    print(f"[dryrun] {arch:18s} {shape_name:12s} {meta['mesh']:8s} OK  "
+          f"peak {mem_gib:6.2f} GiB  args {arg_gib:6.2f} GiB  "
+          f"{tf:8.2f} TF/dev  lower {meta['lower_s']}s "
+          f"compile {meta['compile_s']}s", flush=True)
+    return rec
+
+
+def cells(mesh_sel: str):
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            if mesh_sel in ("single", "both"):
+                yield arch, shape.name, False
+            if mesh_sel in ("multi", "both"):
+                yield arch, shape.name, True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--mesh", type=str, default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default=OUT_DIR)
+    args = ap.parse_args()
+
+    todo = []
+    if args.all:
+        todo = list(cells(args.mesh))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        if args.mesh in ("single", "both"):
+            todo.append((args.arch, args.shape, False))
+        if args.mesh in ("multi", "both"):
+            todo.append((args.arch, args.shape, True))
+
+    failures = []
+    for arch, shape, mp in todo:
+        try:
+            run_cell(arch, shape, mp, args.out)
+        except Exception as e:  # noqa: BLE001
+            failures.append((arch, shape, mp, repr(e)))
+            print(f"[dryrun] {arch} {shape} "
+                  f"{'2x16x16' if mp else '16x16'} FAILED: {e}", flush=True)
+            traceback.print_exc()
+    print(f"\n[dryrun] done: {len(todo) - len(failures)}/{len(todo)} cells "
+          f"passed")
+    for f in failures:
+        print("  FAILED:", f)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,229 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, so any program
+built on ``lax.scan`` (layer stacks, microbatch accumulation, KV chunking)
+under-reports FLOPs/bytes by the trip counts.  This module parses the
+optimized HLO text (``compiled.as_text()``), walks the call graph, and
+multiplies each computation's contribution by its execution count:
+
+  * dot FLOPs:        2 * prod(result_dims) * prod(contracting_dims)
+  * HBM bytes proxy:  sum of operand + result bytes of every top-level
+                      instruction (fusion internals are free — the same
+                      convention XLA's own bytes-accessed uses);
+  * collectives:      operand bytes + ring-wire bytes per op kind, taken
+                      from the per-device (post-SPMD) shapes in the text.
+
+Everything is per-device: post-partitioning HLO shapes are local shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(\([^)]*\)|"
+                     r"[a-z][a-z0-9]*\[[0-9,]*\]\S*)\s+([\w\-]+)")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+)\s+\(.*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[\\\"=:{}nN ]*?(\d+)')
+_CALLS_RE = re.compile(r"calls=(%[\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=(%[\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=(%[\w\.\-]+), body=(%[\w\.\-]+)")
+_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+_SKIP_BYTES_OPS = {"tuple", "get-tuple-element", "parameter", "constant",
+                   "while", "conditional", "bitcast", "after-all",
+                   "opt-barrier", "call", "partition-id", "replica-id",
+                   "iota", "get-dimension-size"}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _bytes_of(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _dims_of(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict | None = None
+    subcalls: list | None = None  # (comp_name, multiplier, count_bytes)
+
+
+def _parse_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur: str | None = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and line.rstrip().endswith("{"):
+            cur = hdr.group(1).lstrip("%")
+            comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _group_size(line: str) -> int:
+    mi = _GROUPS_IOTA_RE.search(line)
+    if mi:
+        return int(mi.group(2))
+    ml = _GROUPS_LIST_RE.search(line)
+    if ml:
+        return len(ml.group(1).split(","))
+    return 1
+
+
+def _analyze_comp(lines: list[str]) -> CompStats:
+    # symbol table: instruction name -> result shape string
+    shapes: dict[str, str] = {}
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+
+    st = CompStats(coll={}, subcalls=[])
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, op = m.group(1), m.group(2), m.group(3)
+
+        if op == "dot":
+            dims = _dims_of(shape_str)
+            out = 1
+            for d in dims:
+                out *= d
+            # contraction size from the lhs operand's shape
+            ct = _CONTRACT_RE.search(line)
+            contract = 1
+            ops_m = re.search(r"dot\(([^)]*)\)", line)
+            if ct and ops_m:
+                lhs_name = ops_m.group(1).split(",")[0].strip()
+                lhs_name = lhs_name.split(" ")[-1]
+                lhs_shape = _dims_of(shapes.get(lhs_name, ""))
+                for idx in ct.group(1).split(","):
+                    if idx and lhs_shape:
+                        i = int(idx)
+                        if i < len(lhs_shape):
+                            contract *= lhs_shape[i]
+            st.flops += 2.0 * out * contract
+
+        if op == "while":
+            w = _WHILE_RE.search(line)
+            t = _TRIP_RE.search(line)
+            trip = int(t.group(1)) if t else 1
+            if w:
+                st.subcalls.append((w.group(2).lstrip("%"), trip, True))
+                st.subcalls.append((w.group(1).lstrip("%"), trip, True))
+        elif op == "fusion":
+            c = _CALLS_RE.search(line)
+            if c:  # flops inside fusions count; bytes don't (fused)
+                st.subcalls.append((c.group(1).lstrip("%"), 1, False))
+        elif op in ("call", "conditional"):
+            for c in _TO_APPLY_RE.findall(line) + _CALLS_RE.findall(line):
+                st.subcalls.append((c.lstrip("%"), 1, True))
+
+        for cop in _COLLECTIVES:
+            if op == cop or op == cop + "-start":
+                result_bytes = _bytes_of(shape_str)
+                g = _group_size(line)
+                if cop == "all-gather":
+                    operand = result_bytes / max(g, 1)
+                    wire = result_bytes * (g - 1) / max(g, 1)
+                elif cop == "reduce-scatter":
+                    operand = result_bytes * g
+                    wire = result_bytes * (g - 1)
+                elif cop == "all-reduce":
+                    operand = result_bytes
+                    wire = 2 * result_bytes * (g - 1) / max(g, 1)
+                else:
+                    operand = result_bytes
+                    wire = result_bytes
+                d = st.coll.setdefault(cop, {"count": 0.0,
+                                             "operand_bytes": 0.0,
+                                             "wire_bytes": 0.0})
+                d["count"] += 1
+                d["operand_bytes"] += operand
+                d["wire_bytes"] += wire
+
+        # HBM byte proxy
+        if op not in _SKIP_BYTES_OPS:
+            b = _bytes_of(shape_str)
+            ops_m = _OPERANDS_RE.search(line.split(op, 1)[1])
+            if ops_m:
+                for token in ops_m.group(1).split(","):
+                    token = token.strip().split(" ")[-1]
+                    if token.startswith("%") and token in shapes:
+                        b += _bytes_of(shapes[token])
+            st.bytes += b
+
+    return st
+
+
+def analyze_hlo(text: str, entry: str | None = None) -> dict:
+    """Returns trip-corrected per-device totals:
+    {flops, bytes, collectives: {op: {count, operand_bytes, wire_bytes}}}."""
+    comps = _parse_computations(text)
+    stats = {name: _analyze_comp(lines) for name, lines in comps.items()}
+
+    if entry is None:
+        m = re.search(r"^ENTRY\s+(%?[\w\.\-]+)", text, re.MULTILINE)
+        entry = m.group(1).lstrip("%") if m else next(iter(comps))
+
+    memo: dict[tuple[str, bool], tuple[float, float, dict]] = {}
+
+    def walk(name: str, count_bytes: bool,
+             depth: int = 0) -> tuple[float, float, dict]:
+        if depth > 64 or name not in stats:
+            return 0.0, 0.0, {}
+        key = (name, count_bytes)
+        if key in memo:
+            return memo[key]
+        st = stats[name]
+        fl = st.flops
+        by = st.bytes if count_bytes else 0.0
+        coll: dict = {k: dict(v) for k, v in (st.coll or {}).items()}
+        for sub, mult, cb in st.subcalls or []:
+            f2, b2, c2 = walk(sub, cb and count_bytes, depth + 1)
+            fl += mult * f2
+            by += mult * b2
+            for k, v in c2.items():
+                d = coll.setdefault(k, {"count": 0.0, "operand_bytes": 0.0,
+                                        "wire_bytes": 0.0})
+                for fkey in d:
+                    d[fkey] += mult * v[fkey]
+        memo[key] = (fl, by, coll)
+        return memo[key]
+
+    fl, by, coll = walk(entry, True)
+    return {"flops": fl, "bytes": by, "collectives": coll}

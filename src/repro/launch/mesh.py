@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Kept as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init,
+and smoke tests must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 single pod (256 chips) or 2x16x16 two pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for(devices: int, tp: int = 0) -> Mesh:
+    """Elastic helper: best 2-D mesh for whatever devices survive a restart.
+
+    tp=0 picks the largest power-of-two TP degree <= min(16, devices)."""
+    if tp <= 0:
+        tp = 1
+        while tp * 2 <= min(16, devices) and devices % (tp * 2) == 0:
+            tp *= 2
+    dp = devices // tp
+    assert dp * tp == devices, f"{devices} devices not divisible by tp={tp}"
+    return jax.make_mesh((dp, tp), ("data", "model"))
+
+
+def make_debug_mesh(dp: int = 2, tp: int = 4) -> Mesh:
+    """Small host-device mesh for tests (needs device_count >= dp*tp)."""
+    return jax.make_mesh((dp, tp), ("data", "model"))

@@ -1,0 +1,65 @@
+"""The paper's PTB model: Zaremba et al. (2014) "medium regularized LSTM"
+at 200 units per layer (the paper's §4.1.1 modification).
+
+Kept deliberately close to the original: 2 LSTM layers, tied dims, dropout
+omitted at smoke scale (a flag enables it), sampled softmax on the output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init
+from repro.sharding.rules import ShardCtx
+
+Array = jax.Array
+Params = dict
+
+
+def init_lstm_lm(key, cfg: ArchConfig, ctx: ShardCtx) -> Params:
+    u = cfg.lstm_units
+    ks = jax.random.split(key, 2 + 3 * cfg.lstm_layers)
+    pd = jnp.dtype(cfg.param_dtype)
+    params: Params = {
+        "embed": {"table": dense_init(ks[0], (cfg.vocab_size, u), pd,
+                                      scale=0.05)},
+        "head": {"w": dense_init(ks[1], (cfg.vocab_size, u), pd,
+                                 scale=0.05)},
+    }
+    for i in range(cfg.lstm_layers):
+        params[f"lstm{i}"] = {
+            "kernel": dense_init(ks[2 + 3 * i], (u, 4 * u), pd),
+            "recurrent": dense_init(ks[3 + 3 * i], (u, 4 * u), pd),
+            "bias": jnp.zeros((4 * u,), pd),
+        }
+    return params
+
+
+def _cell(p: Params, x: Array, h: Array, c: Array) -> tuple[Array, Array]:
+    gates = x @ p["kernel"] + h @ p["recurrent"] + p["bias"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def hidden_states(params: Params, tokens: Array, cfg: ArchConfig,
+                  ctx: ShardCtx) -> tuple[Array, Array]:
+    """tokens: (B, S) -> (h: (B, S, units), aux=0)."""
+    b, s = tokens.shape
+    u = cfg.lstm_units
+    x = params["embed"]["table"][tokens]  # (B, S, u)
+    xs = jnp.moveaxis(x, 1, 0)  # (S, B, u)
+
+    for i in range(cfg.lstm_layers):
+        p = params[f"lstm{i}"]
+
+        def step(carry, xt):
+            h, c = carry
+            h, c = _cell(p, xt, h, c)
+            return (h, c), h
+
+        init = (jnp.zeros((b, u), x.dtype), jnp.zeros((b, u), x.dtype))
+        _, xs = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(xs, 0, 1), jnp.zeros((), jnp.float32)

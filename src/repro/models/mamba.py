@@ -1,0 +1,186 @@
+"""Mamba-1 selective-state-space block (Gu & Dao 2023), TPU-adapted.
+
+The selective scan runs channel-parallel (d_inner sharded over the TP axis —
+zero communication inside the recurrence) and time-chunked: an outer
+``lax.scan`` over sequence chunks carries the (B, d_inner, N) state, and a
+``lax.associative_scan`` parallelizes within each chunk, so the transient
+(B, chunk, d_inner, N) discretized tensors stay VMEM/HBM-friendly instead of
+materializing the full (B, S, d_inner, N).
+
+Decode carries (conv window, ssm state) in the cache — O(1) per token, which
+is why `long_500k` is in-contract for SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init
+from repro.sharding.rules import ShardCtx
+
+Array = jax.Array
+Params = dict
+
+
+def init_mamba(key, cfg: ArchConfig) -> Params:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dtr = cfg.dt_rank
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), pd),
+        "conv_w": dense_init(ks[1], (di, cfg.ssm_conv), pd, scale=0.5),
+        "conv_b": jnp.zeros((di,), pd),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * n), pd),
+        "dt_proj": dense_init(ks[3], (dtr, di), pd, scale=dtr ** -0.5),
+        "dt_bias": jnp.log(jnp.expm1(  # softplus^-1 of U[1e-3, 1e-1] mid
+            jnp.full((di,), 0.01, jnp.float32))).astype(jnp.float32),
+        "a_log": jnp.log(a),
+        "d": jnp.ones((di,), jnp.float32),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, prev: Array | None = None
+                 ) -> tuple[Array, Array]:
+    """Depthwise causal conv over time.  x: (B, S, di), w: (di, K).
+
+    prev: (B, K-1, di) carry-in window (decode/chunk continuation).
+    Returns (y, new_window)."""
+    k = w.shape[1]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    y = sum(xp[:, j:j + x.shape[1]] * w[:, j][None, None, :]
+            for j in range(k))
+    y = y + b[None, None, :]
+    return y, xp[:, -(k - 1):] if k > 1 else prev
+
+
+def _ssm_params(p: Params, xc: Array, cfg: ArchConfig):
+    """Input-dependent (delta, B, C) from the conv output xc: (B, L, di)."""
+    n = cfg.ssm_state
+    dtr = cfg.dt_rank
+    dbc = xc @ p["x_proj"].astype(xc.dtype)  # (B, L, dtr + 2n)
+    dt, b_ssm, c_ssm = jnp.split(dbc, [dtr, dtr + n], axis=-1)
+    delta = jax.nn.softplus(
+        dt @ p["dt_proj"].astype(dt.dtype)
+        + p["dt_bias"][None, None, :]).astype(jnp.float32)  # (B, L, di)
+    return delta, b_ssm.astype(jnp.float32), c_ssm.astype(jnp.float32)
+
+
+def _scan_chunk(a: Array, bx: Array, h0: Array) -> tuple[Array, Array]:
+    """Associative scan of h_t = a_t * h_{t-1} + bx_t within one chunk.
+
+    a, bx: (B, L, di, n); h0: (B, di, n).  Returns (h_all, h_last)."""
+    # Fold the carry-in into the first step.
+    bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, ar * bl + br
+
+    _, h_all = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h_all, h_all[:, -1]
+
+
+def apply_mamba(p: Params, x: Array, cfg: ArchConfig, ctx: ShardCtx,
+                chunk: int = 256) -> Array:
+    """Full-sequence mamba block (train / prefill)."""
+    dt = x.dtype
+    b, s, _ = x.shape
+    xz = ctx.act(x @ p["in_proj"].astype(dt), "bsf")
+    di = cfg.d_inner
+    x_in, z = xz[..., :di], xz[..., di:]
+    xc, _ = _causal_conv(x_in, p["conv_w"].astype(dt), p["conv_b"].astype(dt))
+    xc = jax.nn.silu(xc)
+    y, _ = _scan_noskip(p, xc, cfg, chunk=chunk)
+    y = y + p["d"][None, None, :] * xc.astype(jnp.float32)
+    y = (y.astype(dt) * jax.nn.silu(z))
+    out = ctx.act(y, "bsf") @ _out_proj(p, cfg).astype(dt)
+    return ctx.act(out, "bO.")
+
+
+def _scan_noskip(p, xc, cfg, h0=None, chunk=256):
+    """selective_scan minus the hard-coded skip (we add D*x outside)."""
+    b, s, di = xc.shape
+    n = cfg.ssm_state
+    a_mat = -jnp.exp(p["a_log"])
+    if h0 is None:
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    xcp = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+    delta, b_ssm, c_ssm = _ssm_params(p, xcp, cfg)
+    xf = xcp.astype(jnp.float32)
+
+    def chunked(t):
+        return jnp.moveaxis(
+            t.reshape(b, n_chunks, chunk, *t.shape[2:]), 1, 0)
+
+    def body(h, inp):
+        dl, bs_, cs_, xs_ = inp
+        da = jnp.exp(dl[..., None] * a_mat[None, None])
+        dbx = (dl * xs_)[..., None] * bs_[:, :, None, :]
+        h_all, h_new = _scan_chunk(da, dbx, h)
+        y = jnp.einsum("bldn,bln->bld", h_all, cs_)
+        return h_new, y
+
+    # Remat each chunk: the associative scan's linearization tensors
+    # (O(chunk * di * n) fp32 per combine level) would otherwise be saved
+    # across the whole sequence for the backward pass.
+    body = jax.checkpoint(body, prevent_cse=False)
+    h_last, ys = jax.lax.scan(
+        body, h0, (chunked(delta), chunked(b_ssm), chunked(c_ssm),
+                   chunked(xf)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, n_chunks * chunk, di)[:, :s]
+    return y, h_last
+
+
+def _out_proj(p: Params, cfg: ArchConfig) -> Array:
+    if "out_proj" not in p:
+        raise KeyError("mamba params missing out_proj")
+    return p["out_proj"]
+
+
+def init_mamba_full(key, cfg: ArchConfig) -> Params:
+    p = init_mamba(key, cfg)
+    p["out_proj"] = dense_init(jax.random.fold_in(key, 99),
+                               (cfg.d_inner, cfg.d_model),
+                               jnp.dtype(cfg.param_dtype))
+    return p
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype) -> Params:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_decode(p: Params, x: Array, cache: Params, cfg: ArchConfig,
+                 ctx: ShardCtx) -> tuple[Array, Params]:
+    """Single-token step.  x: (B, 1, d).  O(1) state update."""
+    dt = x.dtype
+    b = x.shape[0]
+    di, n = cfg.d_inner, cfg.ssm_state
+    xz = x @ p["in_proj"].astype(dt)
+    x_in, z = xz[..., :di], xz[..., di:]
+    xc, conv_new = _causal_conv(x_in, p["conv_w"].astype(dt),
+                                p["conv_b"].astype(dt), prev=cache["conv"])
+    xc = jax.nn.silu(xc)  # (B, 1, di)
+    delta, b_ssm, c_ssm = _ssm_params(p, xc, cfg)
+    a_mat = -jnp.exp(p["a_log"])
+    da = jnp.exp(delta[:, 0, :, None] * a_mat[None])  # (B, di, n)
+    dbx = (delta[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] \
+        * b_ssm[:, 0, None, :]
+    h = da * cache["ssm"] + dbx
+    y = jnp.einsum("bdn,bn->bd", h, c_ssm[:, 0])
+    y = y + p["d"][None, :] * xc[:, 0].astype(jnp.float32)
+    y = (y[:, None].astype(dt) * jax.nn.silu(z))
+    out = y @ _out_proj(p, cfg).astype(dt)
+    return ctx.act(out, "bs."), {"conv": conv_new, "ssm": h}

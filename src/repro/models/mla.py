@@ -1,0 +1,134 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3 style).
+
+Train/prefill use the expanded form; decode uses the absorption trick so the
+per-step cost is that of GQA with one latent "KV head" of width
+(kv_lora_rank + qk_rope_dim) — the compressed cache is what gets stored and
+seq-sharded (SP) at 500k-class scale.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import chunked_attention, rms_norm_only, rope
+from repro.sharding.rules import ShardCtx
+
+Array = jax.Array
+Params = dict
+
+
+def _dims(cfg: ArchConfig, tp: int):
+    nh = cfg.n_heads
+    if nh % tp:
+        nh = ((nh + tp - 1) // tp) * tp
+    return nh, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+
+def init_mla(key, cfg: ArchConfig, tp: int = 1) -> Params:
+    nh, nope, rpe, vh = _dims(cfg, tp)
+    d, ql, kvl = cfg.d_model, cfg.q_lora_rank, cfg.kv_lora_rank
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+
+    def init(k, shape):
+        return (jax.random.normal(k, shape, jnp.float32)
+                / np.sqrt(shape[0])).astype(pd)
+
+    return {
+        "wq_a": init(ks[0], (d, ql)),
+        "q_a_norm": {"scale": jnp.ones((ql,), jnp.float32)},
+        "wq_b": init(ks[1], (ql, nh * (nope + rpe))),
+        "wkv_a": init(ks[2], (d, kvl + rpe)),
+        "kv_a_norm": {"scale": jnp.ones((kvl,), jnp.float32)},
+        "wkv_b": init(ks[3], (kvl, nh * (nope + vh))),
+        "wo": init(ks[4], (nh * vh, d)),
+    }
+
+
+def _queries(p: Params, x: Array, positions: Array, cfg: ArchConfig,
+             dt) -> tuple[Array, Array]:
+    B, S = x.shape[0], x.shape[1]
+    nope, rpe = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rms_norm_only(x @ p["wq_a"].astype(dt), p["q_a_norm"]["scale"])
+    q = (cq @ p["wq_b"].astype(dt)).reshape(B, S, -1, nope + rpe)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent(p: Params, x: Array, positions: Array, cfg: ArchConfig,
+            dt) -> tuple[Array, Array]:
+    kvl, rpe = cfg.kv_lora_rank, cfg.qk_rope_dim
+    ckv = x @ p["wkv_a"].astype(dt)  # (B, S, kvl + rpe)
+    c_kv = rms_norm_only(ckv[..., :kvl], p["kv_a_norm"]["scale"])
+    k_rope = rope(ckv[..., None, kvl:], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_forward(p: Params, x: Array, positions: Array, cfg: ArchConfig,
+                ctx: ShardCtx, *, causal: bool = True) -> Array:
+    """Expanded-form MLA for train/prefill."""
+    dt = x.dtype
+    B, S = x.shape[0], x.shape[1]
+    nope, rpe, vh = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = _queries(p, x, positions, cfg, dt)
+    nh = q_nope.shape[2]
+    c_kv, k_rope = _latent(p, x, positions, cfg, dt)
+    kv = (c_kv @ p["wkv_b"].astype(dt)).reshape(B, S, nh, nope + vh)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, nh, rpe))],
+        axis=-1)
+    q = ctx.act(q, "bsh.")
+    k = ctx.act(k, "bsh.")
+    v = ctx.act(v, "bsh.")
+    out = chunked_attention(q, k, v, causal=causal, chunk=cfg.attn_chunk)
+    y = out.reshape(B, S, nh * vh) @ p["wo"].astype(dt)
+    return ctx.act(y, "bO.")
+
+
+def mla_latent_cache(p: Params, x: Array, positions: Array, cfg: ArchConfig
+                     ) -> Array:
+    """Compressed cache entries (B, S, kvl + rpe) for prefill output."""
+    c_kv, k_rope = _latent(p, x, positions, cfg, x.dtype)
+    return jnp.concatenate([c_kv, k_rope], axis=-1)
+
+
+def mla_decode(p: Params, x: Array, cache: Array, pos: Array,
+               cfg: ArchConfig, ctx: ShardCtx) -> tuple[Array, Array]:
+    """Absorbed-form decode.  cache: (B, S, kvl + rpe) compressed latents,
+    seq-shardable over the model axis.  Returns (y, new_cache)."""
+    dt = x.dtype
+    B = x.shape[0]
+    nope, rpe, vh = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvl = cfg.kv_lora_rank
+
+    q_nope, q_rope = _queries(p, x, positions=pos[:, None], cfg=cfg, dt=dt)
+    nh = q_nope.shape[2]
+    new_entry = mla_latent_cache(p, x, pos[:, None], cfg)  # (B, 1, kvl+rpe)
+    cache = cache.at[jnp.arange(B), pos].set(new_entry[:, 0].astype(cache.dtype))
+    cache = ctx.act(cache, "bS.")
+
+    wkv_b = p["wkv_b"].astype(dt).reshape(kvl, nh, nope + vh)
+    wk = wkv_b[..., :nope]  # (kvl, nh, nope)
+    wv = wkv_b[..., nope:]  # (kvl, nh, vh)
+
+    # Absorb: q~ = q_nope @ wk^T per head -> latent-space queries.
+    q_lat = jnp.einsum("bqhn,khn->bqhk", q_nope.astype(jnp.float32),
+                       wk.astype(jnp.float32))  # (B,1,nh,kvl)
+    c_kv = cache[..., :kvl].astype(jnp.float32)
+    k_rope = cache[..., kvl:].astype(jnp.float32)
+    scale = 1.0 / np.sqrt(nope + rpe)
+    s = (jnp.einsum("bqhk,bsk->bhqs", q_lat, c_kv)
+         + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32), k_rope))
+    s = s * scale
+    valid = jnp.arange(cache.shape[1])[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhqs,bsk->bqhk", w, c_kv)  # (B,1,nh,kvl)
+    out = jnp.einsum("bqhk,khv->bqhv", ctx_lat, wv.astype(jnp.float32))
+    y = out.reshape(B, 1, nh * vh).astype(dt) @ p["wo"].astype(dt)
+    return ctx.act(y, "bs."), cache

@@ -1,0 +1,54 @@
+"""The paper's YouTube retrieval model (Covington et al. 2016 style).
+
+Inputs: the ids of the previously watched videos plus a dense user-feature
+vector; tower: averaged watch embeddings ++ user features -> MLP -> hidden
+state h; output: (sampled) softmax over all videos with a separate item
+output-embedding table — exactly the paper's §4.1.1 setting, and the
+motivating case for the sparse path-update form of the statistics refresh
+(only watched/updated items change)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init
+from repro.sharding.rules import ShardCtx
+
+Array = jax.Array
+Params = dict
+
+
+def init_recsys(key, cfg: ArchConfig, ctx: ShardCtx) -> Params:
+    ks = jax.random.split(key, 4 + len(cfg.tower_dims))
+    pd = jnp.dtype(cfg.param_dtype)
+    d_emb = cfg.d_model
+    params: Params = {
+        "embed": {"table": dense_init(ks[0], (cfg.vocab_size, d_emb), pd,
+                                      scale=0.05)},
+        "head": {"w": dense_init(ks[1], (cfg.vocab_size,
+                                         cfg.tower_dims[-1]), pd,
+                                 scale=0.05)},
+        "tower": {},
+    }
+    in_dim = d_emb + cfg.user_feature_dim
+    for i, out_dim in enumerate(cfg.tower_dims):
+        params["tower"][f"w{i}"] = dense_init(ks[2 + i], (in_dim, out_dim),
+                                              pd)
+        params["tower"][f"b{i}"] = jnp.zeros((out_dim,), pd)
+        in_dim = out_dim
+    return params
+
+
+def hidden_states(params: Params, history: Array, user_feats: Array,
+                  cfg: ArchConfig, ctx: ShardCtx) -> tuple[Array, Array]:
+    """history: (B, H) item ids; user_feats: (B, F).  Returns (h: (B, d), 0)."""
+    emb = params["embed"]["table"][history]  # (B, H, d_emb)
+    watch = jnp.mean(emb, axis=1)
+    x = jnp.concatenate([watch, user_feats.astype(watch.dtype)], axis=-1)
+    n = len(cfg.tower_dims)
+    for i in range(n):
+        x = x @ params["tower"][f"w{i}"] + params["tower"][f"b{i}"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x, jnp.zeros((), jnp.float32)

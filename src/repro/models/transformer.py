@@ -1,0 +1,340 @@
+"""Unified decoder-only LM covering dense / MoE / SSM / hybrid families.
+
+Layers are grouped into homogeneous *segments* (consecutive layers with the
+same mixer+ffn kind); each segment's params are stacked on a leading scan dim
+and executed with ``lax.scan`` (+ optional remat) — this keeps the HLO size
+O(#segments), not O(#layers), which is what makes 61-to-80-layer configs
+lowerable in minutes and keeps FSDP all-gathers per-layer inside the loop.
+
+The LM head is intentionally NOT part of this module: the paper's technique
+(kernel-based sampled softmax) lives in repro/core and consumes the last
+hidden state — "it relies only on the model's last hidden layer" (§1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.sharding.rules import ShardCtx
+
+Array = jax.Array
+Params = dict
+
+
+def cache_kv_heads(cfg: ArchConfig, tp: int) -> int:
+    """KV heads stored in decode caches: the TRUE count for GQA (no TP
+    padding — decode shards the cache over SEQUENCE, not heads), padded only
+    for MHA where the padded q heads need 1:1 kv (whisper 20H -> 32)."""
+    nh_p, nkv_p = L.padded_heads(cfg, tp)
+    if cfg.n_kv_heads == cfg.n_heads:
+        return nh_p
+    return cfg.n_kv_heads
+
+
+def segments_of(cfg: ArchConfig) -> list[tuple[str, int]]:
+    """[(kind, n_layers), ...] with consecutive same-kind layers merged."""
+    segs: list[tuple[str, int]] = []
+    for kind in cfg.layer_kinds():
+        if segs and segs[-1][0] == kind:
+            segs[-1] = (kind, segs[-1][1] + 1)
+        else:
+            segs.append((kind, 1))
+    return segs
+
+
+def padded_vocab(cfg: ArchConfig, tp: int) -> int:
+    return -(-cfg.vocab_size // tp) * tp
+
+
+# --- init --------------------------------------------------------------------
+
+
+def _init_layer(key, kind: str, cfg: ArchConfig, tp: int) -> Params:
+    mixer, ffn = kind.split("+")
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": L.init_norm(cfg)}
+    if mixer == "attn":
+        p["attn"] = (MLA.init_mla(ks[0], cfg, tp) if cfg.mla
+                     else L.init_attention(ks[0], cfg, tp))
+    else:
+        p["mamba"] = M.init_mamba_full(ks[0], cfg)
+    if ffn != "none":
+        p["norm2"] = L.init_norm(cfg)
+        if ffn == "moe":
+            p["moe"] = MOE.init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg)
+    return p
+
+
+def init_lm(key, cfg: ArchConfig, ctx: ShardCtx) -> Params:
+    tp = ctx.tp_backbone  # head padding follows the BACKBONE TP degree
+    nvp = padded_vocab(cfg, ctx.tp)  # vocab padding follows the head
+    ks = jax.random.split(key, 8)
+    emb = L.dense_init(ks[0], (nvp, cfg.d_model), jnp.dtype(cfg.param_dtype),
+                       scale=0.02)
+    row_ok = jnp.arange(nvp) < cfg.vocab_size
+    emb = jnp.where(row_ok[:, None], emb, 0)
+    params: Params = {"embed": {"table": emb},
+                      "final_norm": L.init_norm(cfg)}
+    if not cfg.tie_embeddings:
+        head = L.dense_init(ks[1], (nvp, cfg.d_model),
+                            jnp.dtype(cfg.param_dtype), scale=0.02)
+        params["head"] = {"w": jnp.where(row_ok[:, None], head, 0)}
+
+    seg_params = []
+    for i, (kind, count) in enumerate(segments_of(cfg)):
+        lkeys = jax.random.split(jax.random.fold_in(ks[2], i), count)
+        stacked = jax.vmap(lambda k: _init_layer(k, kind, cfg, tp))(lkeys)
+        seg_params.append(stacked)
+    params["segments"] = seg_params
+
+    if cfg.mtp:
+        mk = jax.random.split(ks[3], 3)
+        params["mtp"] = {
+            "proj": L.dense_init(mk[0], (2 * cfg.d_model, cfg.d_model),
+                                 jnp.dtype(cfg.param_dtype)),
+            "norm_h": L.init_norm(cfg),
+            "norm_e": L.init_norm(cfg),
+            "block": _init_layer(mk[1], "attn+mlp", cfg, tp),
+            "final_norm": L.init_norm(cfg),
+        }
+    return params
+
+
+# --- apply -------------------------------------------------------------------
+
+
+def _apply_layer(kind: str, p: Params, x: Array, positions: Array,
+                 cfg: ArchConfig, ctx: ShardCtx) -> tuple[Array, Array]:
+    mixer, ffn = kind.split("+")
+    h = L.apply_norm(p["norm1"], x, cfg)
+    if mixer == "attn":
+        y = (MLA.mla_forward(p["attn"], h, positions, cfg, ctx)
+             if cfg.mla else
+             L.attn_forward(p["attn"], h, positions, cfg, ctx))
+    else:
+        y = M.apply_mamba(p["mamba"], h, cfg, ctx)
+    x = x + y
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        h2 = L.apply_norm(p["norm2"], x, cfg)
+        if ffn == "moe":
+            y2, aux = MOE.apply_moe(p["moe"], h2, cfg, ctx)
+        else:
+            y2 = L.apply_mlp(p["mlp"], h2, cfg, ctx)
+        x = x + y2
+    return x, aux
+
+
+def _scan_segment(kind: str, seg_p: Params, x: Array, positions: Array,
+                  cfg: ArchConfig, ctx: ShardCtx) -> tuple[Array, Array]:
+    def body(carry, layer_p):
+        xc, aux = carry
+        xn, a = _apply_layer(kind, layer_p, xc, positions, cfg, ctx)
+        return (xn, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   seg_p)
+    else:
+        n = jax.tree_util.tree_leaves(seg_p)[0].shape[0]
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(n):
+            sl = jax.tree_util.tree_map(lambda t: t[i], seg_p)
+            (x, aux), _ = body((x, aux), sl)
+    return x, aux
+
+
+def hidden_states(params: Params, tokens: Array, cfg: ArchConfig,
+                  ctx: ShardCtx) -> tuple[Array, Array]:
+    """Backbone forward: tokens (B, S) -> (h (B, S, d), aux_loss)."""
+    b, s = tokens.shape
+    x = L.apply_embed(params["embed"], tokens, cfg, ctx)
+    if cfg.learned_pos and "pos_embed" in params:
+        x = x + params["pos_embed"]["table"][:s][None].astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    aux = jnp.zeros((), jnp.float32)
+    for (kind, _), seg_p in zip(segments_of(cfg), params["segments"]):
+        x, a = _scan_segment(kind, seg_p, x, positions, cfg, ctx)
+        aux = aux + a
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return ctx.act(x, "bs."), aux
+
+
+def mtp_hidden(params: Params, h: Array, tokens: Array, cfg: ArchConfig,
+               ctx: ShardCtx) -> Array:
+    """DeepSeek-style multi-token-prediction trunk: combine h_t with the
+    embedding of token t+1 to predict token t+2.  Returns (B, S-1, d)."""
+    p = params["mtp"]
+    b, s = tokens.shape
+    emb_next = L.apply_embed(params["embed"], tokens[:, 1:], cfg, ctx)
+    hh = L.apply_norm(p["norm_h"], h[:, :-1], cfg)
+    ee = L.apply_norm(p["norm_e"], emb_next, cfg)
+    x = jnp.concatenate([hh, ee], axis=-1) @ p["proj"].astype(h.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s - 1)[None, :], (b, s - 1))
+    x, _ = _apply_layer("attn+mlp", p["block"], x, positions, cfg, ctx)
+    return L.apply_norm(p["final_norm"], x, cfg)
+
+
+# --- caches / serving --------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, ctx: ShardCtx,
+               dtype=None) -> list[Any]:
+    """Per-segment stacked caches sized for max_len tokens."""
+    dt = dtype or jnp.dtype(cfg.dtype)
+    tp = ctx.tp_backbone
+    caches = []
+    for kind, count in segments_of(cfg):
+        mixer = kind.split("+")[0]
+        if mixer == "attn":
+            if cfg.mla:
+                c = jnp.zeros(
+                    (count, batch, max_len,
+                     cfg.kv_lora_rank + cfg.qk_rope_dim), dt)
+                c = ctx.act(c, ".bS.")
+            else:
+                nkv = cache_kv_heads(cfg, tp)
+                hd = cfg.resolved_head_dim
+                c = {
+                    "k": ctx.act(jnp.zeros((count, batch, max_len, nkv, hd),
+                                           dt), ".bS.."),
+                    "v": ctx.act(jnp.zeros((count, batch, max_len, nkv, hd),
+                                           dt), ".bS.."),
+                }
+        else:
+            c = {
+                "conv": jnp.zeros((count, batch, cfg.ssm_conv - 1,
+                                   cfg.d_inner), dt),
+                "ssm": jnp.zeros((count, batch, cfg.d_inner, cfg.ssm_state),
+                                 jnp.float32),
+            }
+            c = {"conv": ctx.act(c["conv"], ".b.f"),
+                 "ssm": ctx.act(c["ssm"], ".bf.")}
+        caches.append(c)
+    return caches
+
+
+def decode_step(params: Params, token: Array, caches: list[Any], pos: Array,
+                cfg: ArchConfig, ctx: ShardCtx
+                ) -> tuple[Array, list[Any]]:
+    """One-token decode.  token: (B, 1) ids; pos: (B,).  Returns (h, caches)."""
+    x = L.apply_embed(params["embed"], token, cfg, ctx)
+    if cfg.learned_pos and "pos_embed" in params:
+        x = x + params["pos_embed"]["table"][pos][:, None].astype(x.dtype)
+    new_caches = []
+    for (kind, _), seg_p, cache in zip(segments_of(cfg), params["segments"],
+                                       caches):
+        mixer, ffn = kind.split("+")
+
+        def body(xc, inp):
+            layer_p, c = inp
+            h = L.apply_norm(layer_p["norm1"], xc, cfg)
+            if mixer == "attn":
+                if cfg.mla:
+                    y, c_new = MLA.mla_decode(layer_p["attn"], h, c, pos,
+                                              cfg, ctx)
+                else:
+                    y, ck, cv = L.attn_decode(
+                        layer_p["attn"], h, c["k"], c["v"], pos, cfg, ctx)
+                    c_new = {"k": ck, "v": cv}
+            else:
+                y, c_new = M.mamba_decode(layer_p["mamba"], h, c, cfg, ctx)
+            xc = xc + y
+            if ffn != "none":
+                h2 = L.apply_norm(layer_p["norm2"], xc, cfg)
+                if ffn == "moe":
+                    y2, _ = MOE.apply_moe(layer_p["moe"], h2, cfg, ctx)
+                else:
+                    y2 = L.apply_mlp(layer_p["mlp"], h2, cfg, ctx)
+                xc = xc + y2
+            return xc, c_new
+
+        x, cache_new = jax.lax.scan(body, x, (seg_p, cache))
+        new_caches.append(cache_new)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return ctx.act(x, "bs."), new_caches
+
+
+def prefill(params: Params, tokens: Array, cfg: ArchConfig, ctx: ShardCtx,
+            max_len: int | None = None) -> tuple[Array, list[Any]]:
+    """Full-sequence prefill: returns (h (B, S, d), caches filled to S)."""
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = L.apply_embed(params["embed"], tokens, cfg, ctx)
+    if cfg.learned_pos and "pos_embed" in params:
+        x = x + params["pos_embed"]["table"][:s][None].astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    caches = []
+    dt = jnp.dtype(cfg.dtype)
+    for (kind, _), seg_p in zip(segments_of(cfg), params["segments"]):
+        mixer, ffn = kind.split("+")
+
+        def body(xc, layer_p):
+            h = L.apply_norm(layer_p["norm1"], xc, cfg)
+            if mixer == "attn":
+                if cfg.mla:
+                    y = MLA.mla_forward(layer_p["attn"], h, positions, cfg,
+                                        ctx)
+                    ent = MLA.mla_latent_cache(layer_p["attn"], h, positions,
+                                               cfg)
+                    pad = max_len - s
+                    c_new = ctx.act(
+                        jnp.pad(ent, ((0, 0), (0, pad), (0, 0))), "bS.")
+                else:
+                    q, k, v = L._qkv(layer_p["attn"], h, cfg, positions, ctx,
+                                     rope_on=not cfg.learned_pos)
+                    y = L.chunked_attention(q, k, v, causal=True,
+                                            chunk=cfg.attn_chunk)
+                    y = (y.reshape(b, s, -1)
+                         @ layer_p["attn"]["wo"].astype(dt))
+                    y = ctx.act(y, "bs.")
+                    pad = max_len - s
+                    nkv_c = cache_kv_heads(cfg, ctx.tp_backbone)
+                    c_new = {
+                        "k": ctx.act(jnp.pad(
+                            k[:, :, :nkv_c].astype(dt),
+                            ((0, 0), (0, pad), (0, 0), (0, 0))), "bS.."),
+                        "v": ctx.act(jnp.pad(
+                            v[:, :, :nkv_c].astype(dt),
+                            ((0, 0), (0, pad), (0, 0), (0, 0))), "bS.."),
+                    }
+            else:
+                mp = layer_p["mamba"]
+                xz = ctx.act(h @ mp["in_proj"].astype(dt), "bsf")
+                di = cfg.d_inner
+                x_in, z = xz[..., :di], xz[..., di:]
+                xc_conv, conv_tail = M._causal_conv(
+                    x_in, mp["conv_w"].astype(dt), mp["conv_b"].astype(dt))
+                xc_act = jax.nn.silu(xc_conv)
+                yy, h_last = M._scan_noskip(mp, xc_act, cfg)
+                yy = yy + mp["d"][None, None, :] * xc_act.astype(jnp.float32)
+                yy = yy.astype(dt) * jax.nn.silu(z)
+                y = ctx.act(ctx.act(yy, "bsf") @ mp["out_proj"].astype(dt),
+                            "bs.")
+                c_new = {"conv": conv_tail, "ssm": h_last}
+            xc = xc + y
+            if ffn != "none":
+                h2 = L.apply_norm(layer_p["norm2"], xc, cfg)
+                if ffn == "moe":
+                    y2, _ = MOE.apply_moe(layer_p["moe"], h2, cfg, ctx)
+                else:
+                    y2 = L.apply_mlp(layer_p["mlp"], h2, cfg, ctx)
+                xc = xc + y2
+            return xc, c_new
+
+        x, cache = jax.lax.scan(body, x, seg_p)
+        caches.append(cache)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return ctx.act(x, "bs."), caches

@@ -1,0 +1,17 @@
+from repro.optim.transform import GradientTransform, chain  # noqa: F401
+from repro.optim.adamw import adamw  # noqa: F401
+from repro.optim.adafactor import adafactor  # noqa: F401
+from repro.optim.sgd import sgd  # noqa: F401
+from repro.optim.clip import clip_by_global_norm  # noqa: F401
+from repro.optim.schedule import cosine_schedule, constant_schedule  # noqa: F401
+from repro.optim.compression import (  # noqa: F401
+    bf16_compress,
+    topk_error_feedback,
+)
+
+
+def make_optimizer(name: str, lr, **kw) -> GradientTransform:
+    """Build the standard production stack: clip -> optimizer."""
+    opts = {"adamw": adamw, "adafactor": adafactor, "sgd": sgd}
+    core = opts[name](lr, **kw)
+    return chain(clip_by_global_norm(1.0), core)

@@ -1,0 +1,76 @@
+"""Adafactor (Shazeer & Stern 2018) — factored second moments.
+
+The memory-scaling optimizer for the 100B+ configs: matrices keep row/col
+statistics only (O(n+m) instead of O(nm)), so a 671B-param model's optimizer
+state fits the v5e HBM budget where Adam's would not (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.transform import GradientTransform
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor(lr, decay: float = 0.99, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> GradientTransform:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        def per_param(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "v": jax.tree_util.tree_map(per_param, params,
+                                        is_leaf=lambda x: hasattr(x, "shape")),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        beta = decay
+
+        def per_param(g, v, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if _factored(g.shape):
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rmean = jnp.mean(vr, axis=-1, keepdims=True)
+                precond = (vr / jnp.maximum(rmean, eps))[..., None] \
+                    * vc[..., None, :]
+                upd = g32 * jax.lax.rsqrt(jnp.maximum(precond, eps))
+                v_new = {"vr": vr, "vc": vc}
+            else:
+                vv = beta * v["v"] + (1 - beta) * g2
+                upd = g32 * jax.lax.rsqrt(jnp.maximum(vv, eps))
+                v_new = {"v": vv}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-30)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            upd = -lr_t * upd
+            if weight_decay:
+                upd = upd - lr_t * weight_decay * p.astype(jnp.float32)
+            return upd, v_new
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [per_param(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        upd = treedef.unflatten([o[0] for o in out])
+        v_new = treedef.unflatten([o[1] for o in out])
+        return upd, {"v": v_new, "step": step}
+
+    return GradientTransform(init, update)

@@ -1,0 +1,43 @@
+"""AdamW with fp32 moments (params may rest in bf16)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.transform import GradientTransform
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> GradientTransform:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2)
+            * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        upd = jax.tree_util.tree_map(
+            lambda m_, v_, p: -lr_t * ((m_ / c1)
+                                       / (jnp.sqrt(v_ / c2) + eps)
+                                       + weight_decay
+                                       * p.astype(jnp.float32)),
+            m, v, params)
+        return upd, {"m": m, "v": v, "step": step}
+
+    return GradientTransform(init, update)

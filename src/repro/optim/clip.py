@@ -1,0 +1,27 @@
+"""Global-norm gradient clipping."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.transform import GradientTransform
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransform:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        norm = global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+        return jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+            grads), state
+
+    return GradientTransform(init, update)

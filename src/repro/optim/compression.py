@@ -1,0 +1,61 @@
+"""Gradient compression for cross-pod all-reduce (distributed-optimization
+tricks; DESIGN.md §7).
+
+``bf16_compress``: cast gradients to bf16 before the (GSPMD-inserted)
+all-reduce — halves cross-pod DCN traffic; the optimizer's fp32 moments
+restore precision on accumulation.
+
+``topk_error_feedback``: keep only the k largest-magnitude entries per
+tensor and carry the residual to the next step (Stich et al. 2018; SETO-style
+error feedback makes sparsified SGD converge).  This runs as a gradient
+transformation BEFORE the data-parallel mean when enabled via
+``train.loop(compress="topk")`` — the dense all-reduce is replaced by a
+scatter of the k values (we emulate with a masked dense tensor, which XLA
+reduces with the same collective but 10-30x fewer effective bits after
+sparsity-aware encoding on real interconnects; see EXPERIMENTS.md §Perf for
+the honest accounting).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.transform import GradientTransform
+
+
+def bf16_compress() -> GradientTransform:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        return jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.bfloat16), grads), state
+
+    return GradientTransform(init, update)
+
+
+def topk_error_feedback(frac: float = 0.05) -> GradientTransform:
+    """Keep the top `frac` fraction of entries (per tensor), accumulate the
+    rest into an error buffer added back next step."""
+
+    def init(params):
+        return {"err": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params):
+        def per(g, e):
+            g32 = g.astype(jnp.float32) + e
+            flat = jnp.abs(g32).reshape(-1)
+            k = max(1, int(flat.shape[0] * frac))
+            thresh = jax.lax.top_k(flat, k)[0][-1]
+            mask = jnp.abs(g32) >= thresh
+            sent = jnp.where(mask, g32, 0.0)
+            return sent.astype(g.dtype), g32 - sent
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_e = treedef.flatten_up_to(state["err"])
+        out = [per(g, e) for g, e in zip(flat_g, flat_e)]
+        return (treedef.unflatten([o[0] for o in out]),
+                {"err": treedef.unflatten([o[1] for o in out])})
+
+    return GradientTransform(init, update)

@@ -1,0 +1,33 @@
+"""SGD with (Nesterov-free) momentum."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.transform import GradientTransform
+
+
+def sgd(lr, momentum: float = 0.0) -> GradientTransform:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        mom = (jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            if momentum else None)
+        return {"mom": mom, "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            mom = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state["mom"], grads)
+            upd = jax.tree_util.tree_map(lambda m: -lr_t * m, mom)
+        else:
+            mom = None
+            upd = jax.tree_util.tree_map(
+                lambda g: -lr_t * g.astype(jnp.float32), grads)
+        return upd, {"mom": mom, "step": step}
+
+    return GradientTransform(init, update)

@@ -1,0 +1,37 @@
+"""Minimal optax-style gradient transformation combinators (pure JAX)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+Params = Any
+State = Any
+Updates = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientTransform:
+    init: Callable[[Params], State]
+    update: Callable[[Updates, State, Params], tuple[Updates, State]]
+
+
+def chain(*transforms: GradientTransform) -> GradientTransform:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s2 = t.update(grads, s, params)
+            new_state.append(s2)
+        return grads, tuple(new_state)
+
+    return GradientTransform(init, update)
+
+
+def apply_updates(params: Params, updates: Updates) -> Params:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+        params, updates)

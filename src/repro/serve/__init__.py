@@ -1,0 +1,6 @@
+from repro.serve.engine import (  # noqa: F401
+    make_prefill_step,
+    make_decode_step,
+    abstract_decode_inputs,
+    abstract_prefill_inputs,
+)

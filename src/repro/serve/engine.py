@@ -1,0 +1,195 @@
+"""Serving: prefill and decode steps (inference never samples the softmax —
+the paper's technique is training-only; inference is a full-head MIPS,
+paper §5.2).
+
+The decode path is the `decode_*` / `long_*` dry-run target: one new token
+against a KV cache of seq_len.  KV caches are sequence-sharded over the
+`model` axis (SP) so no head-count padding or KV duplication is needed and
+the 500k-token hybrid cells fit; the softmax over the sharded seq dim lowers
+to psum-style cross-shard reductions.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core import distributed
+from repro.models import api, encdec, transformer
+from repro.sharding.rules import ShardCtx, param_specs_for
+
+Array = jax.Array
+
+
+def _argmax_island(cfg: ArchConfig, ctx: ShardCtx, head, h2d):
+    """Greedy next token over the vocab-sharded head."""
+    if ctx.mesh is None:
+        logits = h2d.astype(jnp.float32) @ head.astype(jnp.float32).T
+        return jnp.argmax(logits[..., :cfg.vocab_size], axis=-1)
+    # head feature dim follows the 'Fd' rule: sharded over data unless the
+    # serve mode is plain TP (params replicated over data).
+    head_dsp = (None if ctx.mode == "tp" else
+                (ctx.data_axes if len(ctx.data_axes) > 1
+                 else ctx.data_axes[0]))
+    dsp = ctx.data_spec()
+    dataspec = None if h2d.shape[0] % ctx.dp else dsp
+    mdl = ctx.model_axis
+    v_l = head.shape[0] // ctx.tp
+
+    def island(head_l, h_l):
+        head_full = head_l
+        if ctx.mode != "tp":
+            for a in ctx.data_axes[::-1]:
+                head_full = jax.lax.all_gather(head_full, a, axis=1,
+                                               tiled=True)
+        my = jax.lax.axis_index(mdl)
+        n_valid = jnp.clip(cfg.vocab_size - my * v_l, 0, v_l)
+        # Mask padded vocab rows to -inf before the cross-shard argmax.
+        bias = jnp.where(jnp.arange(v_l) < n_valid, 0.0, -jnp.inf)
+        ids, _ = distributed.sharded_logits_argmax(
+            head_full, h_l, axis_name=mdl, bias_local=bias)
+        return ids
+
+    return jax.shard_map(
+        island, mesh=ctx.mesh, check_vma=False,
+        in_specs=(P(mdl, head_dsp), P(dataspec, None)),
+        out_specs=P(dataspec))(head, h2d)
+
+
+def make_decode_step(cfg: ArchConfig, ctx: ShardCtx):
+    """decode_step(params, token (B,1), caches, pos (B,)) ->
+    (next_token (B,), caches)."""
+
+    def step(params, token, caches, pos):
+        if cfg.family == "encdec":
+            h, caches = encdec.decode_step(params, token, caches, pos, cfg,
+                                           ctx)
+        else:
+            h, caches = transformer.decode_step(params, token, caches, pos,
+                                                cfg, ctx)
+        head = api.head_table(params, cfg)
+        nxt = _argmax_island(cfg, ctx, head, h[:, 0, :])
+        return nxt, caches
+
+    return step
+
+
+def make_prefill_step(cfg: ArchConfig, ctx: ShardCtx, max_len: int):
+    """prefill(params, tokens/frames) -> (first generated token, caches)."""
+
+    def step(params, batch):
+        if cfg.family == "encdec":
+            enc_out = encdec.encode(params, batch["frames"], cfg, ctx)
+            cache = encdec.init_dec_cache(
+                params, cfg, batch["frames"].shape[0], max_len, enc_out, ctx)
+            tok0 = jnp.zeros((batch["frames"].shape[0], 1), jnp.int32)
+            pos0 = jnp.zeros((batch["frames"].shape[0],), jnp.int32)
+            h, cache = encdec.decode_step(params, tok0, cache, pos0, cfg, ctx)
+        else:
+            h, cache = transformer.prefill(params, batch["tokens"], cfg, ctx,
+                                           max_len=max_len)
+            h = h[:, -1:, :]
+        head = api.head_table(params, cfg)
+        nxt = _argmax_island(cfg, ctx, head, h[:, 0, :])
+        return nxt, cache
+
+    return step
+
+
+# --- abstract inputs for the dry-run ----------------------------------------
+
+
+def _sharded_sds(struct, specs, ctx: ShardCtx):
+    return jax.tree_util.tree_map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype,
+            sharding=NamedSharding(ctx.mesh, ctx.fit_spec(s.shape, sp))),
+        struct, specs)
+
+
+def abstract_params(cfg: ArchConfig, ctx: ShardCtx, max_len: int):
+    struct = jax.eval_shape(
+        lambda k: api.init_params(k, cfg, ctx, max_len=max_len),
+        jax.random.PRNGKey(0))
+    return _sharded_sds(struct, param_specs_for(struct, ctx), ctx)
+
+
+def _cache_specs(cache_struct, ctx: ShardCtx, batch: int):
+    """Sequence-sharded specs for KV caches, judged by array rank/width.
+
+    When the batch can't shard over the data axes (long_500k: batch=1), the
+    cache SEQUENCE dim is sharded over (data x model) jointly instead — the
+    whole mesh then participates in the attention reduction."""
+    small_batch = batch % ctx.dp != 0
+
+    def spec_for(path, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        nd = len(leaf.shape)
+        mdl = ctx.model_axis
+        dsp = ctx.data_axes if len(ctx.data_axes) > 1 else ctx.data_axes[0]
+        bsp = None if small_batch else dsp
+        seq = (*ctx.data_axes, mdl) if small_batch else mdl
+        if "conv" in name:       # (L, B, K-1, di): di over model
+            return P(None, bsp, None, mdl)
+        if "ssm" in name:        # (L, B, di, n): di over model
+            return P(None, bsp, mdl, None)
+        if nd == 5:              # (L, B, S, KV, hd): seq over model
+            return P(None, bsp, seq, None, None)
+        if nd == 3:
+            return P(None, bsp, None)
+        if nd == 4:              # mla latent (L, B, S, r)
+            return P(None, bsp, seq, None)
+        return P(*([None] * nd))
+
+    flat = jax.tree_util.tree_flatten_with_path(cache_struct)[0]
+    treedef = jax.tree_util.tree_structure(cache_struct)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in flat])
+
+
+def abstract_decode_inputs(cfg: ArchConfig, ctx: ShardCtx, batch: int,
+                           seq_len: int):
+    """(params, token, caches, pos) ShapeDtypeStructs for decode lowering."""
+    params = abstract_params(cfg, ctx, max_len=seq_len)
+    if cfg.family == "encdec":
+        def mk_cache(_):
+            enc_sds = jnp.zeros((batch, seq_len, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+            p_dummy = api.init_params(jax.random.PRNGKey(0), cfg, ctx,
+                                      max_len=seq_len)
+            return encdec.init_dec_cache(p_dummy, cfg, batch, seq_len,
+                                         enc_sds, ctx)
+
+        cache_struct = jax.eval_shape(mk_cache, 0)
+    else:
+        cache_struct = jax.eval_shape(
+            lambda _: transformer.init_cache(cfg, batch, seq_len, ctx), 0)
+    caches = _sharded_sds(cache_struct,
+                          _cache_specs(cache_struct, ctx, batch), ctx)
+    dsp = ctx.data_axes if len(ctx.data_axes) > 1 else ctx.data_axes[0]
+    bsp = None if batch % ctx.dp else dsp
+    token = jax.ShapeDtypeStruct(
+        (batch, 1), jnp.int32, sharding=NamedSharding(ctx.mesh, P(bsp, None)))
+    pos = jax.ShapeDtypeStruct(
+        (batch,), jnp.int32, sharding=NamedSharding(ctx.mesh, P(bsp)))
+    return params, token, caches, pos
+
+
+def abstract_prefill_inputs(cfg: ArchConfig, ctx: ShardCtx, batch: int,
+                            seq_len: int):
+    params = abstract_params(cfg, ctx, max_len=seq_len)
+    dsp = ctx.data_axes if len(ctx.data_axes) > 1 else ctx.data_axes[0]
+    mk = lambda shape, dt, spec: jax.ShapeDtypeStruct(  # noqa: E731
+        shape, dt, sharding=NamedSharding(ctx.mesh, spec))
+    if cfg.family == "encdec":
+        batch_in = {"frames": mk((batch, seq_len, cfg.d_model),
+                                 jnp.dtype(cfg.dtype), P(dsp, None, None))}
+    else:
+        batch_in = {"tokens": mk((batch, seq_len), jnp.int32,
+                                 P(dsp, None))}
+    return params, batch_in

@@ -1,0 +1,8 @@
+from repro.sharding.rules import (  # noqa: F401
+    ShardCtx,
+    ctx_for_serve,
+    ctx_for_train,
+    local_ctx,
+    mesh_ctx,
+    param_specs_for,
+)

@@ -1,0 +1,320 @@
+"""Sharding rules: logical activation kinds + path-based parameter specs.
+
+The production mesh is 2-D ``(data, model)`` (single pod) or 3-D
+``(pod, data, model)`` (multi-pod).  Three sharding MODES map models onto it
+(chosen per arch by `ArchConfig.train_sharding` — the §Perf hillclimb's
+biggest lever):
+
+  * ``tp_fsdp``   — Megatron TP over `model` + ZeRO-3 over the data axes.
+                    Required for MoE archs (experts live on `model`).
+  * ``pure_fsdp`` — batch sharded over ALL axes (data x model), parameters
+                    fully sharded, NO backbone tensor parallelism.  At ~4k
+                    tokens/chip this removes the dominant TP activation
+                    all-reduces for dense models (2 fwd + 2 bwd + 2 remat
+                    (B,S,d) all-reduces per layer -> two parameter
+                    all-gathers per step).  The sampled-softmax HEAD stays
+                    vocab-parallel over `model` — the paper's hierarchy keeps
+                    its mesh mapping in every mode.
+  * ``tp``        — TP only, parameters replicated over data (serving: no
+                    per-token FSDP gathers; inference has no optimizer state
+                    so memory allows it everywhere except the 132B/671B MoEs,
+                    which set serve_fsdp=True).
+
+Parameter spec symbols (path-based rules):
+  F  — FSDP reduction dim: data axes (tp_fsdp) / data+model (pure_fsdp) /
+       replicated (tp)
+  Fd — data-axes-only FSDP (embedding/head feature dim — never `model`,
+       which carries their vocab dim)
+  M  — tensor-parallel dim: `model` in tp modes, replicated in pure_fsdp
+  V  — vocab dim: `model` in EVERY mode (the distributed sampler owns it)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+from jax import lax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+MODES = ("tp_fsdp", "pure_fsdp", "tp")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Carried through model code; `None` mesh = single-device smoke mode."""
+
+    mesh: Mesh | None
+    data_axes: tuple[str, ...] = ("data",)  # ("pod","data") when multi-pod
+    model_axis: str = "model"
+    mode: str = "tp_fsdp"
+    seq_residuals: bool = False  # S-shard the residual stream over `model`
+
+    @property
+    def tp(self) -> int:
+        """Vocab-parallel degree of the head/sampler (always `model`)."""
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def tp_backbone(self) -> int:
+        """Tensor-parallel degree of the backbone (1 in pure_fsdp)."""
+        if self.mesh is None or self.mode == "pure_fsdp":
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def batch_axes(self) -> tuple[str, ...]:
+        if self.mode == "pure_fsdp":
+            return (*self.data_axes, self.model_axis)
+        return self.data_axes
+
+    @property
+    def dp(self) -> int:
+        if self.mesh is None:
+            return 1
+        out = 1
+        for a in self.batch_axes:
+            out *= self.mesh.shape[a]
+        return out
+
+    def batch_spec(self):
+        ax = self.batch_axes
+        return ax if len(ax) > 1 else ax[0]
+
+    def fsdp_spec(self):
+        """The 'F' resolution (None in tp mode).
+
+        pure_fsdp note: parameters stay 2-D sharded (F over data axes, M over
+        `model` — same layout as tp_fsdp) even though activations are
+        batch-sharded over the whole mesh; XLA then all-gathers weights
+        per use along natural axes.  A single-dim 256-way layout triggers
+        XLA's 'involuntary full rematerialization' fallback (measured: fp32
+        replication gathers; see EXPERIMENTS.md §Perf iteration 2)."""
+        if self.mode == "tp":
+            return None
+        ax = self.data_axes
+        return ax if len(ax) > 1 else ax[0]
+
+    def data_spec(self):
+        ax = self.data_axes
+        return ax if len(ax) > 1 else ax[0]
+
+    def _axis_size(self, axes) -> int:
+        if axes is None or self.mesh is None:
+            return 1
+        if isinstance(axes, str):
+            return self.mesh.shape[axes]
+        out = 1
+        for a in axes:
+            out *= self.mesh.shape[a]
+        return out
+
+    def fit_spec(self, shape, spec: "P") -> "P":
+        """Drop mesh axes from dims they don't divide (e.g. batch=1 decode).
+
+        Multi-axis entries fall back to the longest PREFIX that divides —
+        a 256-batch over a (pod,data,model)=512 mesh shards over
+        (pod,data)=32 instead of silently replicating 512-fold."""
+        axes = list(spec) + [None] * (len(shape) - len(spec))
+        out = []
+        for dim, a in zip(shape, axes):
+            if a is None or dim % self._axis_size(a) == 0:
+                out.append(a)
+            elif isinstance(a, tuple):
+                used = []
+                prod = 1
+                for ax in a:
+                    nxt = prod * self.mesh.shape[ax]
+                    if dim % nxt == 0:
+                        prod = nxt
+                        used.append(ax)
+                    else:
+                        break
+                out.append(tuple(used) if len(used) > 1
+                           else (used[0] if used else None))
+            else:
+                out.append(None)
+        return P(*out)
+
+    # -- activation constraints ----------------------------------------------
+    def spec(self, kind: str) -> P:
+        """kind chars: b=batch, s=seq(unsharded), h=heads(TP), f=ffn(TP),
+        v=vocab, e=experts, S=seq(model; SP caches), O=residual seq
+        (model when seq_residuals), .=unsharded."""
+        axes: list[Any] = []
+        for ch in kind:
+            if ch == "b":
+                axes.append(self.batch_spec())
+            elif ch in ("h", "f", "e"):
+                axes.append(self.model_axis
+                            if self.tp_backbone > 1 else None)
+            elif ch in ("v", "S"):
+                axes.append(self.model_axis)
+            elif ch == "O":
+                axes.append(self.model_axis if (
+                    self.seq_residuals and self.mode == "tp_fsdp") else None)
+            else:
+                axes.append(None)
+        return P(*axes)
+
+    def act(self, x, kind: str):
+        if self.mesh is None:
+            return x
+        spec = list(self.spec(kind))
+        # pure_fsdp with batch < mesh size: spill the batch axes that do not
+        # divide onto the SEQUENCE dim (data+context parallelism) so no
+        # device computes redundant tokens.
+        if (self.mode == "pure_fsdp" and len(kind) > 1 and kind[0] == "b"
+                and kind[1] in ("s", "O", ".") and x.ndim >= 2):
+            used: list[str] = []
+            prod = 1
+            for a in self.batch_axes:
+                nxt = prod * self.mesh.shape[a]
+                if x.shape[0] % nxt == 0:
+                    prod = nxt
+                    used.append(a)
+                else:
+                    break
+            leftover = [a for a in self.batch_axes if a not in used]
+            spec[0] = (tuple(used) if len(used) > 1
+                       else (used[0] if used else None))
+            if (leftover and spec[1] is None
+                    and x.shape[1] % self._axis_size(tuple(leftover)) == 0):
+                spec[1] = (tuple(leftover) if len(leftover) > 1
+                           else leftover[0])
+        spec = self.fit_spec(x.shape, P(*spec))
+        return lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def sharding(self, kind: str) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(kind))
+
+
+def local_ctx() -> ShardCtx:
+    return ShardCtx(mesh=None)
+
+
+def mesh_ctx(mesh: Mesh, mode: str = "tp_fsdp",
+             seq_residuals: bool = False) -> ShardCtx:
+    assert mode in MODES, mode
+    axes = mesh.axis_names
+    data_axes = tuple(a for a in axes if a in ("pod", "data"))
+    return ShardCtx(mesh=mesh, data_axes=data_axes, model_axis="model",
+                    mode=mode, seq_residuals=seq_residuals)
+
+
+def ctx_for_train(mesh: Mesh, cfg) -> ShardCtx:
+    return mesh_ctx(mesh, mode=cfg.train_sharding,
+                    seq_residuals=cfg.seq_sharded_residuals)
+
+
+def ctx_for_serve(mesh: Mesh, cfg) -> ShardCtx:
+    return mesh_ctx(mesh, mode="tp_fsdp" if cfg.serve_fsdp else "tp")
+
+
+# ---------------------------------------------------------------------------
+# Parameter spec rules.  First regex (on the '/'-joined path) wins.
+# Stacked layer params get leading Nones automatically.
+# ---------------------------------------------------------------------------
+_RULES: list[tuple[str, tuple[str | None, ...]]] = [
+    # embeddings / heads: vocab over model in every mode.
+    (r"(^|/)embed/table$", ("V", "Fd")),
+    (r"(^|/)head/w$", ("V", "Fd")),
+    (r"(^|/)head/bias$", ("V",)),
+    (r"(^|/)pos_embed/table$", (None, "Fd")),
+    # attention
+    (r"/attn/wq$", ("F", "M")),
+    (r"/attn/wk$", ("F", "M")),
+    (r"/attn/wv$", ("F", "M")),
+    (r"/attn/wo$", ("M", "F")),
+    (r"/attn/(bq|bk|bv)$", ("M",)),
+    (r"/attn/bo$", (None,)),
+    (r"/attn/(q_norm|k_norm)/scale$", (None,)),
+    # MLA
+    (r"/attn/wq_a$", ("F", None)),
+    (r"/attn/wq_b$", (None, "M")),
+    (r"/attn/wkv_a$", ("F", None)),
+    (r"/attn/wkv_b$", (None, "M")),
+    (r"/attn/(q_a_norm|kv_a_norm)/scale$", (None,)),
+    # mlp
+    (r"/mlp/w_gate$", ("F", "M")),
+    (r"/mlp/w_up$", ("F", "M")),
+    (r"/mlp/w_down$", ("M", "F")),
+    (r"/mlp/(b_gate|b_up)$", ("M",)),
+    (r"/mlp/b_down$", (None,)),
+    # moe: experts over model, reduction dim FSDP over data
+    (r"/moe/router$", (None, None)),
+    (r"/moe/router_bias$", (None,)),
+    (r"/moe/w_gate$", ("M", "Fd", None)),
+    (r"/moe/w_up$", ("M", "Fd", None)),
+    (r"/moe/w_down$", ("M", None, "Fd")),
+    (r"/moe/shared/w_gate$", ("F", "M")),
+    (r"/moe/shared/w_up$", ("F", "M")),
+    (r"/moe/shared/w_down$", ("M", "F")),
+    # mamba: d_inner over model (tp modes); channel-parallel scan
+    (r"/mamba/in_proj$", ("F", "M")),
+    (r"/mamba/conv_w$", ("M", None)),
+    (r"/mamba/conv_b$", ("M",)),
+    (r"/mamba/x_proj$", ("M", None)),
+    (r"/mamba/dt_proj$", (None, "M")),
+    (r"/mamba/dt_bias$", ("M",)),
+    (r"/mamba/a_log$", ("M", None)),
+    (r"/mamba/d$", ("M",)),
+    (r"/mamba/out_proj$", ("M", "F")),
+    # lstm / recsys towers
+    (r"/lstm\d*/kernel$", ("F", None)),
+    (r"/lstm\d*/recurrent$", (None, None)),
+    (r"/lstm\d*/bias$", (None,)),
+    (r"/tower/w\d+$", ("F", None)),
+    (r"/tower/b\d+$", (None,)),
+    # norms & scalars
+    (r"/(scale|bias)$", (None,)),
+    (r"/mtp/proj$", ("F", None)),
+]
+
+
+def _resolve(sym: str | None, ctx: ShardCtx):
+    if sym == "F":
+        return ctx.fsdp_spec()
+    if sym == "Fd":
+        return None if ctx.mode == "tp" else ctx.data_spec()
+    if sym == "M":
+        # in pure_fsdp the model axis still SHARDS params (2-D layout), it
+        # just carries no TP compute semantics (activations ignore it).
+        return ctx.model_axis
+    if sym == "V":
+        return ctx.model_axis
+    return None
+
+
+def param_specs_for(params: Any, ctx: ShardCtx) -> Any:
+    """Map a parameter pytree to a pytree of PartitionSpec via path rules."""
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        spec = None
+        for pat, syms in _RULES:
+            if re.search(pat, name):
+                resolved = tuple(_resolve(s, ctx) for s in syms)
+                rank = getattr(leaf, "ndim", len(resolved))
+                if rank > len(resolved):  # stacked scan dim(s) in front
+                    resolved = (None,) * (rank - len(resolved)) + resolved
+                if hasattr(leaf, "shape"):
+                    spec = ctx.fit_spec(leaf.shape, P(*resolved))
+                else:
+                    spec = P(*resolved)
+                break
+        if spec is None:
+            rank = getattr(leaf, "ndim", 0)
+            spec = P(*([None] * rank))
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,0 +1,6 @@
+from repro.train.step import (  # noqa: F401
+    TrainState,
+    make_train_step,
+    init_train_state,
+    sampler_from_cfg,
+)

@@ -1,0 +1,416 @@
+"""The jitted train step: backbone (GSPMD) + sampled-softmax head (shard_map).
+
+Data flow per step (LM example, production mesh):
+
+  tokens (B,S) --DP--> backbone --> h (B,S,d)  [activations data-sharded]
+  h flattened  --> shard_map island over the FULL mesh:
+        head shard (vocab/tp, d/fsdp) --all-gather(fsdp)--> (vocab/tp, d)
+        block stats refresh (Gram matmul)  |  or carried stats (stale OK)
+        stratified kernel sampling: m/tp negatives per shard   [paper §3.2,
+            top tree levels = TP axis, DESIGN.md §2.5]
+        corrected sampled softmax, global logsumexp via psum   [eq. 2-3]
+  loss --> value_and_grad --> optimizer (clip + AdamW/Adafactor)
+
+The sampler's statistics are carried in TrainState and refreshed on a cadence
+(cfg.sampler_refresh_every); the correction always uses the statistics that
+were actually sampled from, so staleness costs bias-of-q only, never
+correctness of the estimator (DESIGN.md §2.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core import blocks, distributed
+from repro.core.kernel_fns import quadratic_kernel, quartic_kernel
+from repro.core.sampled_softmax import sampled_softmax_from_embeddings
+from repro.core.samplers import (
+    BlockSampler,
+    LogitOracleSampler,
+    Sampler,
+    UniformSampler,
+    make_sampler,
+)
+from repro.models import api
+from repro.models.transformer import padded_vocab
+from repro.optim.transform import GradientTransform, apply_updates
+from repro.sharding.rules import ShardCtx, param_specs_for
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    sampler_z: Array | None      # (tp * n_blocks_l, r, r) P('model')
+    sampler_cnt: Array | None    # (tp * n_blocks_l,)      P('model')
+    sampler_wq: Array | None     # (tp * n_blocks_l, B, r) P('model')
+    proj: Array | None           # (r, d) replicated; None = unprojected
+    step: Array                  # () int32
+
+
+def sampler_from_cfg(cfg: ArchConfig) -> Sampler:
+    name = cfg.sampler
+    if name.startswith("block-quadratic"):
+        return make_sampler(
+            name,
+            kernel=quadratic_kernel(cfg.sampler_alpha),
+            block_size=cfg.sampler_block,
+            proj_rank=cfg.sampler_proj_rank,
+        )
+    if name == "quadratic-oracle":
+        return make_sampler(name, alpha=cfg.sampler_alpha)
+    return make_sampler(name)
+
+
+def _sampler_dims(cfg: ArchConfig, tp: int) -> tuple[int, int, int]:
+    """(rows per shard, blocks per shard, sampling rank r)."""
+    nvp = padded_vocab(cfg, tp)
+    v_l = nvp // tp
+    bs = cfg.sampler_block
+    n_blocks_l = -(-v_l // bs)
+    r = cfg.sampler_proj_rank or api.hidden_width(cfg)
+    return v_l, n_blocks_l, r
+
+
+def _local_stats(sampler: Sampler, cfg: ArchConfig, head_full: Array,
+                 z, cnt, wq, n_valid, proj, refresh: Array | None):
+    """Local sampler state for the island.  For block samplers, either
+    rebuild from the gathered head or reuse carried stats."""
+    if isinstance(sampler, BlockSampler):
+        new = blocks.build(head_full, cfg.sampler_block, proj, n_valid)
+        if refresh is None or z is None:
+            stats = new
+        else:
+            keep = blocks.BlockStats(z, cnt, wq, n_valid)
+            stats = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(refresh, a, b), new, keep)
+        return {"stats": stats, "proj": proj}, stats
+    if isinstance(sampler, UniformSampler):
+        return {"n": head_full.shape[0]}, None
+    if isinstance(sampler, LogitOracleSampler):
+        return {"w": head_full, "n_valid": n_valid}, None
+    raise TypeError(f"sampler {sampler.name} unsupported in the train island")
+
+
+def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
+                    aux_coef: float = 0.01
+                    ) -> Callable[[TrainState, dict, Array],
+                                  tuple[TrainState, dict]]:
+    sampler = sampler_from_cfg(cfg)
+    mesh = ctx.mesh
+    tp = ctx.tp
+    m = cfg.m_negatives
+    dataspec = ctx.batch_spec() if ctx.mesh is not None else None
+    head_fsdp = (ctx.data_spec() if ctx.mesh is not None else None)
+    pure_fsdp = ctx.mode == "pure_fsdp"
+    v_l, n_blocks_l, r = _sampler_dims(cfg, tp)
+
+    carries_stats = isinstance(sampler, BlockSampler)
+    mdl = ctx.model_axis
+
+    # --- stats refresh (no gradients; runs once per step, before the
+    # microbatch loop, so all microbatches sample from the SAME q) ----------
+    def refresh_island(head, z, cnt, wq, proj, refresh):
+        proj_l = proj if cfg.sampler_proj_rank else None
+        my = lax.axis_index(mdl)
+        head_full = head  # gather the Fd-sharded feature dim
+        for a in ctx.data_axes[::-1]:
+            head_full = lax.all_gather(head_full, a, axis=1, tiled=True)
+        n_valid = jnp.clip(cfg.vocab_size - my * v_l, 0, v_l)
+        new = blocks.build(head_full, cfg.sampler_block, proj_l, n_valid)
+        keep = blocks.BlockStats(z, cnt, wq, n_valid)
+        stats = jax.tree_util.tree_map(
+            lambda a_, b_: jnp.where(refresh, a_, b_), new, keep)
+        return stats.z, stats.cnt, stats.wq
+
+    def refresh_stats(head, z, cnt, wq, proj, refresh):
+        if not carries_stats:
+            return z, cnt, wq
+        head = lax.stop_gradient(head)
+        if mesh is None:
+            n_valid = jnp.asarray(cfg.vocab_size, jnp.int32)
+            proj_l = proj if cfg.sampler_proj_rank else None
+            new = blocks.build(head, cfg.sampler_block, proj_l, n_valid)
+            keep = blocks.BlockStats(z, cnt, wq, n_valid)
+            stats = jax.tree_util.tree_map(
+                lambda a_, b_: jnp.where(refresh, a_, b_), new, keep)
+            return stats.z, stats.cnt, stats.wq
+        pj = proj if proj is not None else jnp.zeros((), jnp.float32)
+        return jax.shard_map(
+            refresh_island, mesh=mesh, check_vma=False,
+            in_specs=(P(mdl, head_fsdp), P(mdl), P(mdl), P(mdl), P(), P()),
+            out_specs=(P(mdl), P(mdl), P(mdl)),
+        )(head, z, cnt, wq, pj, refresh)
+
+    # --- loss (differentiable; consumes fixed stats) ------------------------
+    def head_island(head, h2d, labels, z, cnt, wq, proj, key):
+        """Runs per-(data,model) shard.  head: (v_l, d_l) local;
+        h2d: (T_l, d); labels: (T_l,).  Returns the GLOBAL loss sum (scalar,
+        replicated) — tokens x vocab both stay sharded end to end."""
+        proj_l = proj if cfg.sampler_proj_rank else None
+        my = lax.axis_index(mdl)
+        head_full = head
+        for a in ctx.data_axes[::-1]:
+            head_full = lax.all_gather(head_full, a, axis=1, tiled=True)
+        if pure_fsdp:
+            # tokens are sharded over `model` too; the vocab-parallel loss
+            # needs each model column to hold its data-row's full token set.
+            h2d = lax.all_gather(h2d, mdl, axis=0, tiled=True)
+            labels = lax.all_gather(labels, mdl, axis=0, tiled=True)
+        n_valid = jnp.clip(cfg.vocab_size - my * v_l, 0, v_l)
+        if carries_stats:
+            state_local = {"stats": blocks.BlockStats(z, cnt, wq, n_valid),
+                           "proj": proj_l}
+        else:
+            state_local, _ = _local_stats(
+                sampler, cfg, lax.stop_gradient(head_full), None, None, None,
+                n_valid, proj_l, None)
+        # Distinct negatives per data shard: fold the data position in.
+        for a in ctx.data_axes:
+            key = jax.random.fold_in(key, lax.axis_index(a))
+        losses = distributed.sharded_sampled_softmax_loss(
+            head_full, h2d, labels, sampler,
+            jax.tree_util.tree_map(lax.stop_gradient, state_local),
+            m, key, axis_name=mdl, abs_mode=cfg.abs_softmax)
+        lsum = jnp.sum(losses)
+        if pure_fsdp:
+            # every model column computed the same row-sum; average the
+            # replicas through a psum so the output is truly replicated.
+            lsum = lax.psum(lsum / tp, mdl)
+        for a in ctx.data_axes:
+            lsum = lax.psum(lsum, a)
+        return lsum
+
+    def island_caller(head, h2d, labels, z, cnt, wq, proj, key):
+        """Returns the global loss SUM over all tokens."""
+        if mesh is None:
+            n_valid = jnp.asarray(cfg.vocab_size, jnp.int32)
+            proj_l = proj if cfg.sampler_proj_rank else None
+            if carries_stats:
+                state_local = {
+                    "stats": blocks.BlockStats(z, cnt, wq, n_valid),
+                    "proj": proj_l}
+            else:
+                state_local, _ = _local_stats(
+                    sampler, cfg, lax.stop_gradient(head), None, None, None,
+                    n_valid, proj_l, None)
+            state_local = jax.tree_util.tree_map(lax.stop_gradient,
+                                                 state_local)
+            neg_ids, logq = sampler.sample_batch(state_local, h2d, m, key)
+            return jnp.sum(sampled_softmax_from_embeddings(
+                head, h2d, labels, lax.stop_gradient(neg_ids),
+                lax.stop_gradient(logq), abs_mode=cfg.abs_softmax))
+        stat_in = P(mdl) if carries_stats else P()
+        if not carries_stats:  # dummies so shard_map sees arrays, not None
+            z = cnt = wq = jnp.zeros((), jnp.float32)
+        if proj is None:
+            proj = jnp.zeros((), jnp.float32)  # unused placeholder
+        return jax.shard_map(
+            head_island, mesh=mesh, check_vma=False,
+            in_specs=(P(mdl, head_fsdp), P(dataspec, None), P(dataspec),
+                      stat_in, stat_in, stat_in, P(), P()),
+            out_specs=P(),
+        )(head, h2d, labels, z, cnt, wq, proj, key)
+
+    def loss_fn(params, mb, z, cnt, wq, proj, key):
+        h2d, labels, aux = api.backbone_hidden(params, mb, cfg, ctx)
+        head = api.head_table(params, cfg)
+        lsum = island_caller(head, h2d, labels, z, cnt, wq, proj, key)
+        loss = lsum / h2d.shape[0]
+        return loss + aux_coef * aux, (loss, aux)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def _split_microbatches(batch, mu):
+        """(B, ...) -> (mu, B/mu, ...) with shard-local interleaving, so the
+        data-axis sharding of the batch dim is preserved (DESIGN.md §7)."""
+
+        def one(x):
+            b = x.shape[0]
+            assert b % mu == 0, f"batch {b} % microbatches {mu} != 0"
+            xr = x.reshape(b // mu, mu, *x.shape[1:])
+            xr = jnp.moveaxis(xr, 1, 0)
+            if ctx.mesh is not None:
+                xr = ctx.act(xr, ".b" + "." * (x.ndim - 1))
+            return xr
+
+        return jax.tree_util.tree_map(one, batch)
+
+    def train_step(state: TrainState, batch: dict, key: Array
+                   ) -> tuple[TrainState, dict]:
+        refresh = (state.step % max(cfg.sampler_refresh_every, 1)) == 0
+        head = api.head_table(state.params, cfg)
+        z, cnt, wq = refresh_stats(head, state.sampler_z, state.sampler_cnt,
+                                   state.sampler_wq, state.proj, refresh)
+        mu = max(cfg.microbatches, 1)
+        if mu == 1:
+            (total, (loss, aux)), grads = grad_fn(
+                state.params, batch, z, cnt, wq, state.proj, key)
+        else:
+            mbs = _split_microbatches(batch, mu)
+            keys = jax.random.split(key, mu)
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            acc0 = (jnp.zeros(()), jnp.zeros(()), jnp.zeros(()), g0)
+
+            def body(acc, inp):
+                mb, k_i = inp
+                (tot_i, (loss_i, aux_i)), g_i = grad_fn(
+                    state.params, mb, z, cnt, wq, state.proj, k_i)
+                tot, lo, au, g = acc
+                g = jax.tree_util.tree_map(
+                    lambda a_, b_: a_ + b_.astype(jnp.float32), g, g_i)
+                return (tot + tot_i, lo + loss_i, au + aux_i, g), None
+
+            (total, loss, aux, grads), _ = jax.lax.scan(
+                body, acc0, (mbs, keys))
+            total, loss, aux = total / mu, loss / mu, aux / mu
+            grads = jax.tree_util.tree_map(lambda g_: g_ / mu, grads)
+        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        params = apply_updates(state.params, updates)
+        new_state = TrainState(
+            params=params,
+            opt_state=opt_state,
+            sampler_z=z if carries_stats else state.sampler_z,
+            sampler_cnt=cnt if carries_stats else state.sampler_cnt,
+            sampler_wq=wq if carries_stats else state.sampler_wq,
+            proj=state.proj,
+            step=state.step + 1,
+        )
+        metrics = {"loss": loss, "aux_loss": aux, "total_loss": total}
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ArchConfig, ctx: ShardCtx,
+                     opt: GradientTransform, max_len: int = 4096
+                     ) -> TrainState:
+    """Concrete (allocating) init — smoke tests / examples.  The dry-run uses
+    abstract_train_state instead."""
+    sampler = sampler_from_cfg(cfg)
+    params = api.init_params(key, cfg, ctx, max_len=max_len)
+    opt_state = opt.init(params)
+    head = api.head_table(params, cfg)
+    proj = None
+    if cfg.sampler_proj_rank:
+        proj = blocks.make_projection(jax.random.fold_in(key, 7),
+                                      head.shape[1], cfg.sampler_proj_rank)
+    z = cnt = wq = None
+    if isinstance(sampler, BlockSampler):
+        if ctx.mesh is None:
+            stats = blocks.build(head, cfg.sampler_block, proj,
+                                 cfg.vocab_size)
+            z, cnt, wq = stats.z, stats.cnt, stats.wq
+        else:
+            v_l, n_blocks_l, r = _sampler_dims(cfg, tp=ctx.tp)
+            bs = cfg.sampler_block
+            z = jnp.zeros((ctx.tp * n_blocks_l, r, r), jnp.float32)
+            cnt = jnp.zeros((ctx.tp * n_blocks_l,), jnp.float32)
+            wq = jnp.zeros((ctx.tp * n_blocks_l, bs, r), jnp.float32)
+    return TrainState(params=params, opt_state=opt_state, sampler_z=z,
+                      sampler_cnt=cnt, sampler_wq=wq, proj=proj,
+                      step=jnp.zeros((), jnp.int32))
+
+
+# --- abstract (dry-run) state ------------------------------------------------
+
+
+def _spec_to_sharding(ctx: ShardCtx, spec: P):
+    return NamedSharding(ctx.mesh, spec)
+
+
+def abstract_train_state(cfg: ArchConfig, ctx: ShardCtx,
+                         opt: GradientTransform, max_len: int = 4096
+                         ) -> TrainState:
+    """ShapeDtypeStruct TrainState with NamedShardings attached — zero
+    allocation; feeds jit(...).lower() for the multi-pod dry-run."""
+    sampler = sampler_from_cfg(cfg)
+    key = jax.random.PRNGKey(0)
+    params_struct = jax.eval_shape(
+        lambda k: api.init_params(k, cfg, ctx, max_len=max_len), key)
+    specs = param_specs_for(params_struct, ctx)
+    params_sds = jax.tree_util.tree_map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=_spec_to_sharding(ctx, sp)),
+        params_struct, specs)
+
+    opt_struct = jax.eval_shape(opt.init, params_struct)
+    opt_sds = _derive_opt_sds(opt_struct, params_struct, specs, ctx)
+
+    d_h = api.hidden_width(cfg)
+    z = cnt = wq = None
+    if isinstance(sampler, BlockSampler):
+        v_l, n_blocks_l, r = _sampler_dims(cfg, ctx.tp)
+        bs = cfg.sampler_block
+        mspec = _spec_to_sharding(ctx, P(ctx.model_axis))
+        z = jax.ShapeDtypeStruct((ctx.tp * n_blocks_l, r, r), jnp.float32,
+                                 sharding=mspec)
+        cnt = jax.ShapeDtypeStruct((ctx.tp * n_blocks_l,), jnp.float32,
+                                   sharding=mspec)
+        wq = jax.ShapeDtypeStruct((ctx.tp * n_blocks_l, bs, r), jnp.float32,
+                                  sharding=mspec)
+    proj = None
+    if cfg.sampler_proj_rank:
+        proj = jax.ShapeDtypeStruct((cfg.sampler_proj_rank, d_h),
+                                    jnp.float32,
+                                    sharding=_spec_to_sharding(ctx, P()))
+    step = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=_spec_to_sharding(ctx, P()))
+    return TrainState(params=params_sds, opt_state=opt_sds, sampler_z=z,
+                      sampler_cnt=cnt, sampler_wq=wq, proj=proj, step=step)
+
+
+def _derive_opt_sds(opt_struct, params_struct, param_specs, ctx: ShardCtx):
+    """Specs for optimizer state: same-shape leaves inherit the param spec;
+    Adafactor's factored vr/vc drop the reduced axis."""
+    by_path = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_struct)[0]:
+        key = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+        by_path[key] = leaf.shape
+    spec_by_path = {}
+    for path, sp in jax.tree_util.tree_flatten_with_path(param_specs)[0]:
+        key = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+        spec_by_path[key] = sp
+
+    def leaf_sds(path, leaf):
+        key = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+        # try to find the param path inside the state path
+        spec = P()
+        for start in range(len(key)):
+            for end in range(len(key), start, -1):
+                sub = key[start:end]
+                if sub in spec_by_path:
+                    psp = spec_by_path[sub]
+                    pshape = by_path[sub]
+                    if leaf.shape == pshape:
+                        spec = psp
+                    elif leaf.shape == pshape[:-1]:      # adafactor vr
+                        spec = P(*tuple(psp)[:-1])
+                    elif leaf.shape == pshape[:-2] + pshape[-1:]:  # vc
+                        spec = P(*(tuple(psp)[:-2] + tuple(psp)[-1:]))
+                    break
+            else:
+                continue
+            break
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=_spec_to_sharding(ctx, spec))
+
+    flat = jax.tree_util.tree_flatten_with_path(opt_struct)[0]
+    treedef = jax.tree_util.tree_structure(opt_struct)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf_sds(p, l) for p, l in flat])

@@ -1,0 +1,9 @@
+"""Small shared utilities (no heavy deps, no device state)."""
+from repro.utils.misc import (  # noqa: F401
+    ceil_div,
+    next_pow2,
+    flatten_dict,
+    unflatten_dict,
+    tree_size_bytes,
+    human_bytes,
+)

@@ -1,0 +1,83 @@
+"""TPU two-level block sampler (DESIGN.md §2.2-2.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import blocks
+from repro.core.kernel_fns import quadratic_kernel
+
+K = quadratic_kernel(100.0)
+
+
+def _ref_logq(w, h):
+    s = K.pair_scores(h, w)
+    return jnp.log(s) - jnp.log(s.sum())
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(10, 400), st.integers(2, 64))
+def test_block_distribution_matches_kernel(n, block):
+    w = jax.random.normal(jax.random.PRNGKey(n + block), (n, 8)) * 0.4
+    h = jax.random.normal(jax.random.PRNGKey(1), (8,))
+    stats = blocks.build(w, block)
+    got = blocks.all_class_logq(stats, K, h)[:n]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(_ref_logq(w, h)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_block_sampled_logq_exact():
+    n, d, m = 777, 16, 4000
+    w = jax.random.normal(jax.random.PRNGKey(0), (n, d)) * 0.3
+    h = jax.random.normal(jax.random.PRNGKey(1), (d,))
+    stats = blocks.build(w, 64)
+    ids, logq = blocks.sample(stats, K, h, m, jax.random.PRNGKey(2))
+    assert (ids < n).all(), "padding classes must never be sampled"
+    ref = _ref_logq(w, h)
+    np.testing.assert_allclose(np.asarray(logq), np.asarray(ref[ids]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_shared_mode_matches_batch_summed_kernel():
+    n, d, t = 400, 12, 33
+    w = jax.random.normal(jax.random.PRNGKey(3), (n, d)) * 0.4
+    hs = jax.random.normal(jax.random.PRNGKey(4), (t, d))
+    stats = blocks.build(w, 32)
+    got = blocks.all_class_logq(stats, K, hs, shared=True)[:n]
+    q = (100.0 * jnp.square(hs @ w.T)).sum(0) + t
+    ref = jnp.log(q) - jnp.log(q.sum())
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4,
+                               atol=1e-4)
+
+    ids, logq = blocks.sample_shared(stats, K, hs, 512, jax.random.PRNGKey(5))
+    assert (ids < n).all()
+    np.testing.assert_allclose(np.asarray(logq), np.asarray(ref[ids]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_update_rows_equals_rebuild():
+    n, d = 200, 8
+    w = jax.random.normal(jax.random.PRNGKey(6), (n, d))
+    stats = blocks.build(w, 32)
+    ids = jnp.array([3, 77, 150, 199])
+    w_new = jax.random.normal(jax.random.PRNGKey(7), (4, d))
+    upd = blocks.update_rows(stats, ids, w_new)
+    rebuilt = blocks.build(w.at[ids].set(w_new), 32)
+    np.testing.assert_allclose(np.asarray(upd.z), np.asarray(rebuilt.z),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_runtime_n_valid_masks_padding():
+    """Rows at/after n_valid carry exactly zero probability — the invariant
+    the vocab-sharded head relies on (whisper's 51866 % 16 != 0)."""
+    w = jax.random.normal(jax.random.PRNGKey(8), (64, 8))
+    stats = blocks.build(w, 16, n_valid=50)
+    h = jax.random.normal(jax.random.PRNGKey(9), (8,))
+    logq = blocks.all_class_logq(stats, K, h)
+    assert np.all(np.asarray(logq[50:]) == -np.inf)
+    probs = np.exp(np.asarray(logq[:50]))
+    np.testing.assert_allclose(probs.sum(), 1.0, rtol=1e-5)
+    ids, _ = blocks.sample(stats, K, h, 3000, jax.random.PRNGKey(10))
+    assert (np.asarray(ids) < 50).all()

@@ -1,0 +1,59 @@
+"""Checkpoint manager: roundtrip, atomicity, GC, async."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _state(seed):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 4)),
+                       "b": jnp.zeros((4,))},
+            "step": jnp.asarray(seed, jnp.int32)}
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    st = _state(3)
+    mgr.save(3, st, extra={"step": 3, "data_state": {"seed": 1, "step": 9}},
+             blocking=True)
+    like = jax.tree_util.tree_map(jnp.zeros_like, st)
+    restored, extra = mgr.restore(like=like)
+    for a, b in zip(jax.tree_util.tree_leaves(st),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert extra["data_state"] == {"seed": 1, "step": 9}
+
+
+def test_keep_k_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _state(s), blocking=True)
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_latest_and_specific_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    for s in (10, 20):
+        mgr.save(s, _state(s), blocking=True)
+    like = jax.tree_util.tree_map(jnp.zeros_like, _state(0))
+    r10, _ = mgr.restore(like=like, step=10)
+    assert int(r10["step"]) == 10
+    rlast, _ = mgr.restore(like=like)
+    assert int(rlast["step"]) == 20
+
+
+def test_async_save_then_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(7, _state(7), blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 7
+
+
+def test_no_tmp_dirs_left(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(1, _state(1), blocking=True)
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]

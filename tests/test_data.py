@@ -1,0 +1,50 @@
+"""Data pipeline: determinism, resumability, learnable structure."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import batch_iterator_for
+from repro.data.synthetic import SyntheticLM, SyntheticRecsys
+from repro.sharding.rules import local_ctx
+
+
+def test_lm_batches_deterministic_and_resumable():
+    cfg = get_config("llama3-8b").reduced()
+    it1 = batch_iterator_for(cfg, local_ctx(), global_batch=4, seq_len=8,
+                             seed=5)
+    batches = [next(it1) for _ in range(4)]
+    state = it1.state_dict()
+    nxt = next(it1)
+
+    it2 = batch_iterator_for(cfg, local_ctx(), global_batch=4, seq_len=8,
+                             seed=5)
+    it2.load_state(state)
+    nxt2 = next(it2)
+    np.testing.assert_array_equal(np.asarray(nxt["tokens"]),
+                                  np.asarray(nxt2["tokens"]))
+    # and different batches differ
+    assert not np.array_equal(np.asarray(batches[0]["tokens"]),
+                              np.asarray(batches[1]["tokens"]))
+
+
+def test_lm_labels_are_next_tokens():
+    lm = SyntheticLM(vocab_size=50, seed=0)
+    b = lm.sample_batch(jax.random.PRNGKey(0), 3, 10)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+def test_lm_chain_is_learnable():
+    """The Markov chain's entropy is well below uniform — structure exists."""
+    lm = SyntheticLM(vocab_size=256, rank=8, temperature=2.0, seed=0)
+    ent = lm.chain_entropy()
+    assert ent < np.log(256) - 0.3
+
+
+def test_recsys_bayes_floor_below_uniform():
+    task = SyntheticRecsys(n_items=512, seed=0)
+    assert task.bayes_loss() < np.log(512) - 0.5
+    b = task.sample_batch(jax.random.PRNGKey(1), 16)
+    assert b["history"].shape == (16, 3)
+    assert b["labels"].shape == (16,)

@@ -1,0 +1,51 @@
+"""The trip-count-corrected HLO analyzer that §Roofline depends on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def test_scan_trip_count_correction():
+    def f(xs, w):
+        def body(c, x):
+            return c @ w + x @ w, ()
+        c, _ = jax.lax.scan(body, xs[0], xs)
+        return c.sum()
+
+    xs = jnp.zeros((7, 32, 64))
+    w = jnp.zeros((64, 64))
+    compiled = jax.jit(f).lower(xs, w).compile()
+    res = analyze_hlo(compiled.as_text())
+    expected = 7 * 2 * (2 * 32 * 64 * 64)  # 7 iterations x 2 matmuls
+    assert abs(res["flops"] - expected) / expected < 0.02
+    # raw XLA undercounts by ~the trip count
+    raw = compiled.cost_analysis()["flops"]
+    assert res["flops"] > 5 * raw
+
+
+def test_nested_scan():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, ()
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, ()
+        c, _ = jax.lax.scan(outer, x, None, length=5)
+        return c.sum()
+
+    x = jnp.zeros((16, 16))
+    w = jnp.zeros((16, 16))
+    compiled = jax.jit(f).lower(x, w).compile()
+    res = analyze_hlo(compiled.as_text())
+    expected = 5 * 3 * 2 * 16 * 16 * 16
+    assert abs(res["flops"] - expected) / expected < 0.05
+
+
+def test_plain_matmul_exact():
+    compiled = jax.jit(
+        lambda a, b: a @ b).lower(jnp.zeros((128, 256)),
+                                  jnp.zeros((256, 64))).compile()
+    res = analyze_hlo(compiled.as_text())
+    assert res["flops"] == 2 * 128 * 256 * 64
+    assert res["bytes"] >= (128 * 256 + 256 * 64 + 128 * 64) * 4

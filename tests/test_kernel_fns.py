@@ -1,0 +1,60 @@
+"""Kernel-function math (paper §3.1, §3.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.kernel_fns import (
+    gram_set_mass,
+    gram_set_mass_batch,
+    gram_stats,
+    quadratic_kernel,
+    quartic_kernel,
+)
+
+
+@pytest.mark.parametrize("alpha", [1.0, 100.0])
+def test_quadratic_phi_realizes_kernel(alpha):
+    """<phi(a), phi(b)> == K(a, b) — the defining property (eq. 8)."""
+    k = quadratic_kernel(alpha)
+    a = jax.random.normal(jax.random.PRNGKey(0), (5, 7))
+    b = jax.random.normal(jax.random.PRNGKey(1), (5, 7))
+    via_phi = jnp.sum(k.phi(a) * k.phi(b), axis=-1)
+    direct = k.of_dot(jnp.sum(a * b, axis=-1))
+    np.testing.assert_allclose(np.asarray(via_phi), np.asarray(direct),
+                               rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 40), st.integers(1, 16),
+       st.floats(0.1, 200.0))
+def test_gram_mass_equals_sum_of_kernels(n, d, alpha):
+    """alpha h^T Z_C h + |C|  ==  sum_j K(h, w_j)  (DESIGN.md §2.1)."""
+    k = quadratic_kernel(alpha)
+    w = jax.random.normal(jax.random.PRNGKey(n * 17 + d), (n, d))
+    h = jax.random.normal(jax.random.PRNGKey(d), (d,))
+    z, _ = gram_stats(w)
+    mass = gram_set_mass(k, z, jnp.asarray(float(n)), h)
+    direct = jnp.sum(k.pair_scores(h, w))
+    np.testing.assert_allclose(float(mass), float(direct), rtol=1e-4)
+
+
+def test_batch_gram_mass():
+    """Frobenius form of the batch-summed kernel (DESIGN.md §2.3)."""
+    k = quadratic_kernel(50.0)
+    w = jax.random.normal(jax.random.PRNGKey(0), (13, 6))
+    hs = jax.random.normal(jax.random.PRNGKey(1), (9, 6))
+    z, _ = gram_stats(w)
+    hh = jnp.einsum("ti,tj->ij", hs, hs)
+    mass = gram_set_mass_batch(k, z, jnp.asarray(13.0), hh,
+                               jnp.asarray(9.0))
+    direct = jnp.sum(k.pair_scores(hs, w))
+    np.testing.assert_allclose(float(mass), float(direct), rtol=1e-4)
+
+
+def test_kernels_nonnegative():
+    t = jnp.linspace(-50, 50, 101)
+    assert (quadratic_kernel(100.0).of_dot(t) >= 1.0).all()
+    assert (quartic_kernel(1.0).of_dot(t) >= 1.0).all()

@@ -1,0 +1,95 @@
+"""Optimizers, clipping, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    adafactor,
+    adamw,
+    bf16_compress,
+    chain,
+    clip_by_global_norm,
+    cosine_schedule,
+    sgd,
+    topk_error_feedback,
+)
+from repro.optim.clip import global_norm
+from repro.optim.transform import apply_updates
+
+
+def _optimize(opt, steps=200):
+    """Minimize ||x - t||^2 with a matrix param (exercises factored stats)."""
+    t = jnp.arange(12.0).reshape(3, 4) / 10
+    params = {"x": jnp.zeros((3, 4)), "b": jnp.zeros((4,))}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum((p["x"] - t) ** 2) + jnp.sum((p["b"] - 1.0) ** 2)
+
+    for _ in range(steps):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    return float(loss(params))
+
+
+@pytest.mark.parametrize("opt,steps", [
+    (sgd(0.1, momentum=0.9), 200),
+    (adamw(0.05, weight_decay=0.0), 300),
+    (adafactor(0.05), 400),
+])
+def test_optimizers_converge(opt, steps):
+    assert _optimize(opt, steps) < 1e-2
+
+
+def test_clip_by_global_norm():
+    clip = clip_by_global_norm(1.0)
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, _ = clip.update(g, clip.init(g), g)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    g_small = {"a": jnp.full((10,), 0.01)}
+    kept, _ = clip.update(g_small, clip.init(g_small), g_small)
+    np.testing.assert_allclose(np.asarray(kept["a"]),
+                               np.asarray(g_small["a"]), rtol=1e-6)
+
+
+def test_bf16_compress_dtype():
+    c = bf16_compress()
+    g = {"a": jnp.ones((4,), jnp.float32)}
+    out, _ = c.update(g, c.init(g), g)
+    assert out["a"].dtype == jnp.bfloat16
+
+
+def test_topk_error_feedback_conserves_mass():
+    """sent + residual == grad + prior residual (nothing is lost)."""
+    c = topk_error_feedback(frac=0.25)
+    g = {"a": jnp.arange(16.0).reshape(4, 4)}
+    state = c.init(g)
+    sent, state = c.update(g, state, g)
+    total = np.asarray(sent["a"]) + np.asarray(state["err"]["a"])
+    np.testing.assert_allclose(total, np.asarray(g["a"]), rtol=1e-6)
+    # sparsity actually happened
+    assert (np.asarray(sent["a"]) == 0).sum() >= 10
+    # second step re-injects the residual
+    sent2, state2 = c.update(g, state, g)
+    total2 = np.asarray(sent2["a"]) + np.asarray(state2["err"]["a"])
+    np.testing.assert_allclose(
+        total2, 2 * np.asarray(g["a"]) - np.asarray(sent["a"]), rtol=1e-6)
+
+
+def test_cosine_schedule_shape():
+    fn = cosine_schedule(1.0, warmup_steps=10, total_steps=100)
+    assert float(fn(jnp.asarray(0))) == 0.0
+    assert abs(float(fn(jnp.asarray(10))) - 1.0) < 0.11
+    assert float(fn(jnp.asarray(100))) <= 0.11
+    assert float(fn(jnp.asarray(5))) < float(fn(jnp.asarray(10)))
+
+
+def test_chain_composition():
+    opt = chain(clip_by_global_norm(1.0), sgd(0.5))
+    g = {"a": jnp.full((4,), 100.0)}
+    state = opt.init(g)
+    upd, _ = opt.update(g, state, g)
+    # clipped to norm 1, then scaled by lr 0.5
+    assert abs(float(global_norm(upd)) - 0.5) < 1e-5

@@ -1,0 +1,121 @@
+"""Sampled softmax loss + correction (paper §2.2, eq. 2-5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sampled_softmax import (
+    adjust_neg_logits,
+    full_softmax_grad_wrt_logits,
+    full_softmax_loss,
+    sampled_softmax_from_embeddings,
+    sampled_softmax_grad_wrt_logits,
+    sampled_softmax_loss,
+)
+from repro.core.samplers import softmax_oracle
+
+
+def test_adjusted_logits_eq2():
+    o = jnp.array([1.0, -2.0, 0.5])
+    logq = jnp.log(jnp.array([0.2, 0.5, 0.3]))
+    got = adjust_neg_logits(o, logq, m=10)
+    want = o - jnp.log(10 * jnp.array([0.2, 0.5, 0.3]))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_softmax_sampling_logits_identity_eq13():
+    """For q = softmax, sum_k exp(o'_k) == sum_l exp(o_l) holds for EVERY
+    sample (appendix eq. 13) — not just in expectation."""
+    n, m = 50, 7
+    o = jax.random.normal(jax.random.PRNGKey(0), (n,)) * 2
+    logq = jax.nn.log_softmax(o)
+    for seed in range(5):
+        ids = jax.random.categorical(jax.random.PRNGKey(seed), logq,
+                                     shape=(m,))
+        adj = adjust_neg_logits(o[ids], logq[ids], m)
+        np.testing.assert_allclose(float(jnp.exp(adj).sum()),
+                                   float(jnp.exp(o).sum()), rtol=1e-4)
+
+
+def test_loss_with_all_classes_equals_full_softmax():
+    """Sampling every class exactly once with q uniform and m = n recovers
+    the full softmax loss up to the constant correction."""
+    n, d, t = 32, 8, 6
+    w = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    h = jax.random.normal(jax.random.PRNGKey(2), (t, d)) * 0.5
+    labels = jnp.arange(t) % n
+    # m -> infinity limit check instead: huge uniform sample approx.
+    m = 20000
+    ids = jax.random.randint(jax.random.PRNGKey(3), (m,), 0, n)
+    logq = jnp.full((m,), -np.log(n))
+    loss_s = sampled_softmax_from_embeddings(w, h, labels, ids, logq)
+    loss_f = full_softmax_loss(w, h, labels)
+    np.testing.assert_allclose(np.asarray(loss_s), np.asarray(loss_f),
+                               rtol=0.05, atol=0.05)
+
+
+def test_abs_softmax_mode():
+    n, d, t = 16, 4, 5
+    w = jax.random.normal(jax.random.PRNGKey(4), (n, d))
+    h = jax.random.normal(jax.random.PRNGKey(5), (t, d))
+    labels = jnp.arange(t)
+    loss_abs = full_softmax_loss(w, h, labels, abs_mode=True)
+    logits = jnp.abs(h @ w.T)
+    ref = (jax.nn.logsumexp(logits, axis=-1)
+           - jnp.take_along_axis(logits, labels[:, None], 1)[:, 0])
+    np.testing.assert_allclose(np.asarray(loss_abs), np.asarray(ref),
+                               rtol=1e-5)
+
+
+def test_gradient_estimator_eq5_softmax_unbiased():
+    """Monte-Carlo check of Theorem 2.1: with q = softmax the expected
+    sampled gradient (eq. 5) equals p - y (eq. 4)."""
+    n, m, reps = 12, 4, 20000
+    o = jax.random.normal(jax.random.PRNGKey(6), (n,))
+    labels = jnp.asarray(3)
+    logq = jax.nn.log_softmax(o)
+    full = full_softmax_grad_wrt_logits(o[None], labels[None])[0]
+
+    def one(key):
+        ids = jax.random.categorical(key, logq, shape=(m,))
+        return sampled_softmax_grad_wrt_logits(o, labels, ids, logq[ids],
+                                               n=n)
+
+    keys = jax.random.split(jax.random.PRNGKey(7), reps)
+    grads = jax.vmap(one)(keys)
+    est = grads.mean(0)
+    np.testing.assert_allclose(np.asarray(est), np.asarray(full), atol=0.03)
+
+
+def test_gradient_estimator_uniform_biased():
+    """With q uniform and small m the estimator must be measurably biased
+    (the paper's core negative result)."""
+    n, m, reps = 12, 2, 6000
+    o = jax.random.normal(jax.random.PRNGKey(8), (n,)) * 3
+    labels = jnp.asarray(0)
+    logq = jnp.full((n,), -np.log(n))
+    full = full_softmax_grad_wrt_logits(o[None], labels[None])[0]
+
+    def one(key):
+        ids = jax.random.randint(key, (m,), 0, n)
+        return sampled_softmax_grad_wrt_logits(o, labels, ids, logq[ids],
+                                               n=n)
+
+    keys = jax.random.split(jax.random.PRNGKey(9), reps)
+    est = jax.vmap(one)(keys).mean(0)
+    bias = float(jnp.max(jnp.abs(est - full)))
+    assert bias > 0.05, f"uniform sampling should be biased, bias={bias}"
+
+
+def test_shared_vs_per_example_shapes():
+    n, d, t, m = 20, 6, 4, 8
+    w = jax.random.normal(jax.random.PRNGKey(10), (n, d))
+    h = jax.random.normal(jax.random.PRNGKey(11), (t, d))
+    labels = jnp.zeros((t,), jnp.int32)
+    ids_shared = jnp.arange(m)
+    logq = jnp.full((m,), -np.log(n))
+    l1 = sampled_softmax_from_embeddings(w, h, labels, ids_shared, logq)
+    ids_per = jnp.tile(ids_shared[None], (t, 1))
+    logq_per = jnp.tile(logq[None], (t, 1))
+    l2 = sampled_softmax_from_embeddings(w, h, labels, ids_per, logq_per)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-5)

@@ -1,0 +1,69 @@
+"""Sampler registry invariants (hypothesis property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.samplers import make_sampler
+
+SAMPLERS = ["uniform", "unigram", "softmax", "abs-softmax",
+            "quadratic-oracle", "quartic-oracle", "tree-quadratic",
+            "block-quadratic"]
+
+
+@pytest.mark.parametrize("name", SAMPLERS)
+@settings(max_examples=8, deadline=None)
+@given(st.integers(16, 200), st.integers(2, 24), st.integers(1, 64))
+def test_sampler_invariants(name, n, d, m):
+    """ids in range, logq finite & <= 0, deterministic under same key."""
+    sampler = make_sampler(name)
+    w = jax.random.normal(jax.random.PRNGKey(n + d), (n, d)) * 0.4
+    h = jax.random.normal(jax.random.PRNGKey(d), (d,))
+    state = sampler.init(jax.random.PRNGKey(0), w)
+    ids, logq = sampler.sample(state, h, m, jax.random.PRNGKey(42))
+    assert ids.shape == (m,) and logq.shape == (m,)
+    assert (np.asarray(ids) >= 0).all() and (np.asarray(ids) < n).all()
+    lq = np.asarray(logq)
+    assert np.isfinite(lq).all() and (lq <= 1e-5).all()
+    ids2, logq2 = sampler.sample(state, h, m, jax.random.PRNGKey(42))
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids2))
+
+
+def test_unigram_respects_counts():
+    sampler = make_sampler("unigram")
+    w = jnp.zeros((4, 2))
+    state = sampler.init(None, w)
+    counts = jnp.array([0.0, 0.0, 1000.0, 0.0])
+    state = sampler.set_counts(state, counts)
+    ids, logq = sampler.sample(state, jnp.zeros((2,)), 500,
+                               jax.random.PRNGKey(0))
+    frac = float((np.asarray(ids) == 2).mean())
+    assert frac > 0.95
+
+
+def test_bigram_conditional():
+    sampler = make_sampler("bigram")
+    w = jnp.zeros((6, 2))
+    state = sampler.init(None, w)
+    counts = jnp.eye(6) * 100.0  # next == prev with high probability
+    state = sampler.set_counts(state, counts)
+    ids, _ = sampler.sample_ctx(state, jnp.asarray(4), 200,
+                                jax.random.PRNGKey(1))
+    assert float((np.asarray(ids) == 4).mean()) > 0.9
+
+
+def test_oracle_softmax_matches_model_distribution():
+    sampler = make_sampler("softmax")
+    n, d = 128, 8
+    w = jax.random.normal(jax.random.PRNGKey(2), (n, d)) * 0.5
+    h = jax.random.normal(jax.random.PRNGKey(3), (d,))
+    state = sampler.init(None, w)
+    ids, logq = sampler.sample(state, h, 30000, jax.random.PRNGKey(4))
+    emp = np.bincount(np.asarray(ids), minlength=n) / 30000
+    ref = np.asarray(jax.nn.softmax(w @ h))
+    assert 0.5 * np.abs(emp - ref).sum() < 0.05
+    np.testing.assert_allclose(np.asarray(logq),
+                               np.asarray(jnp.log(ref)[ids]), rtol=1e-3,
+                               atol=1e-4)

@@ -1,0 +1,81 @@
+"""Paper-faithful divide & conquer tree (§3.2): exactness + updates."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tree
+from repro.core.blocks import make_projection
+from repro.core.kernel_fns import quadratic_kernel
+
+K = quadratic_kernel(100.0)
+
+
+def _ref_logq(w, h):
+    s = K.pair_scores(h, w)
+    return jnp.log(s) - jnp.log(s.sum())
+
+
+@pytest.mark.parametrize("n,leaf", [(64, 4), (100, 8), (1000, 16), (37, 2)])
+def test_tree_distribution_matches_kernel(n, leaf):
+    """q_tree(i) == K(h,w_i)/sum_j K(h,w_j) for EVERY class (eq. 9
+    telescoping product) — deterministic, no sampling noise."""
+    w = jax.random.normal(jax.random.PRNGKey(n), (n, 12)) * 0.4
+    h = jax.random.normal(jax.random.PRNGKey(1), (12,))
+    stats = tree.build(w, K, leaf_size=leaf)
+    got = tree.all_class_logq(stats, K, h)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(_ref_logq(w, h)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tree_sampled_logq_is_exact():
+    n, d, m = 500, 10, 2000
+    w = jax.random.normal(jax.random.PRNGKey(0), (n, d)) * 0.4
+    h = jax.random.normal(jax.random.PRNGKey(1), (d,))
+    stats = tree.build(w, K, leaf_size=8)
+    ids, logq = tree.sample(stats, K, h, m, jax.random.PRNGKey(2))
+    ref = _ref_logq(w, h)
+    np.testing.assert_allclose(np.asarray(logq), np.asarray(ref[ids]),
+                               rtol=1e-4, atol=1e-4)
+    assert (ids >= 0).all() and (ids < n).all()
+
+
+def test_tree_empirical_distribution():
+    """Sampling frequencies converge to the kernel distribution."""
+    n, d = 64, 8
+    w = jax.random.normal(jax.random.PRNGKey(3), (n, d)) * 0.5
+    h = jax.random.normal(jax.random.PRNGKey(4), (d,))
+    stats = tree.build(w, K, leaf_size=4)
+    ids, _ = tree.sample(stats, K, h, 40000, jax.random.PRNGKey(5))
+    emp = np.bincount(np.asarray(ids), minlength=n) / 40000
+    ref = np.asarray(jnp.exp(_ref_logq(w, h)))
+    assert 0.5 * np.abs(emp - ref).sum() < 0.05  # TV distance
+
+
+def test_path_update_equals_rebuild():
+    """Paper Fig. 1b: O(D log n) path refresh == full rebuild."""
+    n, d = 256, 8
+    w = jax.random.normal(jax.random.PRNGKey(6), (n, d))
+    stats = tree.build(w, K, leaf_size=8)
+    ids = jnp.array([0, 17, 130, 255, 64])
+    w_new = jax.random.normal(jax.random.PRNGKey(7), (5, d))
+    upd = tree.update_path(stats, K, ids, w_new)
+    rebuilt = tree.build(w.at[ids].set(w_new), K, leaf_size=8)
+    for a, b in zip(upd.levels_z, rebuilt.levels_z):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-4)
+
+
+def test_tree_with_projection_self_consistent():
+    """Projected-space tree: logq matches its own all-class oracle."""
+    n, d, r = 300, 32, 8
+    w = jax.random.normal(jax.random.PRNGKey(8), (n, d)) * 0.3
+    h = jax.random.normal(jax.random.PRNGKey(9), (d,))
+    proj = make_projection(jax.random.PRNGKey(10), d, r)
+    stats = tree.build(w, K, leaf_size=8, proj=proj)
+    ids, logq = tree.sample(stats, K, h, 500, jax.random.PRNGKey(11),
+                            proj=proj)
+    all_logq = tree.all_class_logq(stats, K, h, proj=proj)
+    np.testing.assert_allclose(np.asarray(logq),
+                               np.asarray(all_logq[ids]), rtol=1e-4,
+                               atol=1e-4)
