@@ -4,6 +4,9 @@ Compares, as the number of classes n grows:
   * oracle softmax sampling          — O(n d) per query batch
   * two-level block kernel sampling  — O(n_blocks r^2 + m B r)
   * batch-shared kernel sampling     — O(n_blocks r^2) amortized over T
+  * tree sampling, sequential vs level-synchronous batched descent
+    (DESIGN.md §2.6): T*m*depth per-draw Bernoulli steps collapse to
+    depth batched steps per batch of draws
 and the statistics refresh (one batched Gram matmul).
 """
 from __future__ import annotations
@@ -14,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_row, time_fn
-from repro.core import blocks
+from repro.core import blocks, tree
 from repro.core.kernel_fns import quadratic_kernel
 from repro.core.samplers import softmax_oracle
 
@@ -51,6 +54,25 @@ def run(ns=(4096, 16384, 65536), d=64, m=64, t_batch=64, quiet=False):
         us = time_fn(f_shared, hs, jax.random.PRNGKey(4))
         rows.append(csv_row(f"sample/batch-shared/n={n}", us,
                             f"amortized={us/t_batch:.2f}us/query"))
+
+        # tree sampler (paper §3.2): sequential per-draw descent vs the
+        # level-synchronous batched engine.  Sequential cost is T*m*depth
+        # root-to-leaf Bernoulli steps; batched is depth steps per batch.
+        tstats = tree.build(w, k, leaf_size=64)
+        depth = tstats.depth
+        f_seq = jax.jit(lambda h, key: jax.vmap(
+            lambda hh, kk: tree.sample_sequential(tstats, k, hh, m, kk))(
+                h, jax.random.split(key, h.shape[0])))
+        us_seq = time_fn(f_seq, hs, jax.random.PRNGKey(6))
+        rows.append(csv_row(
+            f"sample/tree-sequential/n={n}", us_seq,
+            f"seq-steps={t_batch * m * depth}"))
+        f_bat = jax.jit(lambda h, key: tree.sample_batch(tstats, k, h, m, key))
+        us_bat = time_fn(f_bat, hs, jax.random.PRNGKey(6))
+        rows.append(csv_row(
+            f"sample/tree-batched/n={n}", us_bat,
+            f"seq-steps={depth} step-ratio={t_batch * m:.0f}x "
+            f"speedup={us_seq / us_bat:.2f}x"))
 
         # statistics refresh
         f_build = jax.jit(lambda ww: blocks.build(ww, block))

@@ -2,13 +2,22 @@
 
 Public API:
   kernel_fns       — sampling kernels + Gram-sum summary statistics
+  hierarchy        — shared hierarchical-statistics core + level-synchronous
+                     batched descent (DESIGN.md §2.1, §2.6)
   tree             — paper-faithful divide & conquer sampler (§3.2)
   blocks           — TPU-native two-level sampler (DESIGN.md §2.2)
   samplers         — unified sampler registry (uniform/unigram/.../kernel)
   sampled_softmax  — corrected loss (eq. 2-3), absolute softmax, oracles
   distributed      — vocab-sharded sampler + loss for the TP mesh axis
 """
-from repro.core import blocks, kernel_fns, sampled_softmax, samplers, tree  # noqa: F401
+from repro.core import (  # noqa: F401
+    blocks,
+    hierarchy,
+    kernel_fns,
+    sampled_softmax,
+    samplers,
+    tree,
+)
 from repro.core.kernel_fns import quadratic_kernel, quartic_kernel  # noqa: F401
 from repro.core.sampled_softmax import (  # noqa: F401
     full_softmax_loss,

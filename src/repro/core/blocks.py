@@ -6,6 +6,10 @@ single contraction, then ONE exact leaf step inside the sampled blocks.  The
 math is identical (the telescoping-product correctness argument of §3.2.1
 holds for any fixed partition), only the schedule changes.
 
+Statistics construction and sparse refresh are shared with the tree sampler
+through the hierarchy core (``core/hierarchy.py``): ``BlockStats`` is the
+depth-0 view of the same Gram-sum hierarchy (leaf level only).
+
 Two sampling modes:
   * per-example (paper-faithful): each query h draws its own negatives.
   * batch-shared (beyond-paper, DESIGN.md §2.3): one negative set per batch,
@@ -23,6 +27,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core import hierarchy
 from repro.core.kernel_fns import SamplingKernel
 
 Array = jax.Array
@@ -59,12 +64,17 @@ class BlockStats:
     def n_pad(self) -> int:
         return self.n_blocks * self.block_size
 
+    def as_hierarchy(self) -> hierarchy.HierarchyStats:
+        """The shared-core view: a depth-0 hierarchy (leaf level only)."""
+        return hierarchy.HierarchyStats((self.z,), (self.cnt,), self.wq,
+                                        self.n_valid, self.n_pad)
 
-def _project(w: Array, proj: Array | None) -> Array:
-    w32 = w.astype(jnp.float32)
-    if proj is None:
-        return w32
-    return w32 @ proj.astype(jnp.float32).T
+
+def _from_hierarchy(hs: hierarchy.HierarchyStats) -> BlockStats:
+    return BlockStats(hs.levels_z[-1], hs.levels_cnt[-1], hs.wq, hs.n_valid)
+
+
+_project = hierarchy.project
 
 
 def make_projection(key: Array, d: int, r: int) -> Array:
@@ -82,39 +92,16 @@ def build(w: Array, block_size: int, proj: Array | None = None,
     ``n_valid``: number of real classes (rows beyond it must be zero); may be
     a traced scalar for sharded tables with padding rows.
     """
-    n_rows, _ = w.shape
-    if n_valid is None:
-        n_valid = n_rows
-    n_valid = jnp.asarray(n_valid, jnp.int32)
-    wq = _project(w, proj)
-    r = wq.shape[-1]
-    n_blocks = -(-n_rows // block_size)
-    pad = n_blocks * block_size - n_rows
-    wq = jnp.pad(wq, ((0, pad), (0, 0)))
-    # Runtime-zero any rows at/after n_valid (pads must carry no mass).
-    row_ok = jnp.arange(n_blocks * block_size) < n_valid
-    wq = jnp.where(row_ok[:, None], wq, 0.0).reshape(n_blocks, block_size, r)
-    z = jnp.einsum("nbi,nbj->nij", wq, wq)
-    cnt = jnp.clip(
-        n_valid.astype(jnp.float32)
-        - jnp.arange(n_blocks, dtype=jnp.float32) * block_size,
-        0.0, float(block_size))
-    return BlockStats(z, cnt, wq, n_valid)
+    return _from_hierarchy(hierarchy.build(w, block_size, proj=proj,
+                                           n_valid=n_valid, full_tree=False))
 
 
 def update_rows(stats: BlockStats, ids: Array, w_new: Array,
                 proj: Array | None = None) -> BlockStats:
     """Sparse refresh (paper Fig. 1b): scatter Delta(w w^T) into touched
     blocks.  ids must be unique.  Cost O(k r^2)."""
-    wq_new = _project(w_new, proj)
-    blk = ids // stats.block_size
-    off = ids % stats.block_size
-    wq_old = stats.wq[blk, off]
-    delta = (jnp.einsum("ki,kj->kij", wq_new, wq_new)
-             - jnp.einsum("ki,kj->kij", wq_old, wq_old))
-    z = stats.z.at[blk].add(delta)
-    wq = stats.wq.at[blk, off].set(wq_new)
-    return BlockStats(z, stats.cnt, wq, stats.n_valid)
+    return _from_hierarchy(
+        hierarchy.update_rows(stats.as_hierarchy(), ids, w_new, proj))
 
 
 def _block_logits_single(kernel: SamplingKernel, stats: BlockStats,

@@ -158,12 +158,19 @@ def sharded_partition_diagnostics(state_local: Any, sampler: Sampler,
     """Per-shard share of the global kernel mass (load-balance telemetry).
 
     Uses the root-level Gram statistics: rho_s = sum_b alpha h^T Z_b h + n_s,
-    normalized across shards.  Shape (T,) fraction owned by this shard."""
+    normalized across shards.  Works for both block statistics and the
+    hierarchy form (whose per-shard root IS the shard's total mass — the top
+    log2(tp) tree levels are the TP axis, DESIGN.md §2.5).
+    Shape (T,) fraction owned by this shard."""
     stats = state_local["stats"]
     proj = state_local.get("proj")
     hq = h.astype(jnp.float32)
     if proj is not None:
         hq = hq @ proj.T
-    quad = jnp.einsum("nij,ti,tj->tn", stats.z, hq, hq)
-    mass = jnp.sum(sampler.kernel.alpha * quad + stats.cnt[None, :], axis=-1)
+    if hasattr(stats, "levels_z"):  # hierarchy/tree statistics
+        z, cnt = stats.levels_z[0], stats.levels_cnt[0]
+    else:  # two-level block statistics
+        z, cnt = stats.z, stats.cnt
+    quad = jnp.einsum("nij,ti,tj->tn", z, hq, hq)
+    mass = jnp.sum(sampler.kernel.alpha * quad + cnt[None, :], axis=-1)
     return mass / lax.psum(mass, axis_name)

@@ -1,0 +1,372 @@
+"""Shared hierarchical Gram-statistics core (DESIGN.md §2.1, §2.6).
+
+Both kernel samplers — the paper-faithful binary tree (§3.2, ``core/tree.py``)
+and the TPU two-level block sampler (DESIGN.md §2.2, ``core/blocks.py``) —
+are views over the SAME object: a hierarchy of class sets whose per-node
+summary statistic is the Gram sum ``Z_C = sum_{j in C} w_j w_j^T`` plus a
+true-class count, so that the quadratic-kernel mass of any node is
+
+    <phi(h), z(C)> = alpha * h^T Z_C h + |C|            (DESIGN.md §2.1)
+
+This module owns everything the two previously duplicated:
+
+  * ``build``        — leaf Gram blocks from one batched matmul, padding and
+                       runtime ``n_valid`` masking, count bookkeeping, and the
+                       bottom-up pairwise parent sums (full tree) or a single
+                       leaf level (two-level form).
+  * ``update_rows``  — the paper's Fig. 1b sparse refresh: scatter
+                       ``Delta(w w^T)`` into every level along each
+                       leaf-to-root path.
+  * ``descend``      — the LEVEL-SYNCHRONOUS batched descent (DESIGN.md §2.6):
+                       all (T, m) in-flight draws advance one tree level per
+                       step, each level being one batched mass evaluation
+                       (dense levels route through the ``block_scores`` Pallas
+                       kernel, the within-leaf categorical through
+                       ``leaf_scores``) instead of T*m*depth sequential
+                       Bernoulli draws.
+  * ``to_heap`` / ``from_heap`` — pack the per-level tuple into two flat
+                       arrays so tree statistics can be carried in
+                       ``TrainState`` and sharded ``P('model')`` exactly like
+                       block statistics (DESIGN.md §2.5).
+
+The reported log-q is always the EXACT log-probability of the draw under the
+hierarchy's distribution (the telescoping product of eq. 9 times the
+within-leaf conditional), which is what the eq. 2 correction requires.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernel_fns import SamplingKernel, gram_set_mass
+from repro.utils.misc import log2_int, next_pow2
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HierarchyStats:
+    """Per-level Gram statistics + the (possibly projected) sampling table.
+
+    levels_z:   tuple over levels root..leaf of (nodes_l, r, r) Gram sums;
+                level l of a full binary tree holds 2^l nodes, and the
+                two-level form holds only the leaf level.
+    levels_cnt: tuple over levels of (nodes_l,) true (non-padding) counts.
+    wq:         (num_leaves, leaf_size, r) sampling copy of the class
+                embeddings (projected if proj is not None; zero rows for
+                padding and for rows at/after ``n_valid``).  Leaf scoring and
+                therefore the reported log-q are exact w.r.t. this copy.
+    n_valid:    scalar int32 — number of real classes.  Dynamic so sharded
+                tables whose last shard carries padding rows keep
+                exactly-zero probability on the pads (runtime-masked).
+    n:          static row-count bound (the table size at trace time); used
+                only by the all-class test oracles for static slicing.
+    """
+
+    levels_z: tuple[Array, ...]
+    levels_cnt: tuple[Array, ...]
+    wq: Array
+    n_valid: Array
+    n: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def depth(self) -> int:
+        return len(self.levels_z) - 1
+
+    @property
+    def num_leaves(self) -> int:
+        return self.wq.shape[0]
+
+    @property
+    def leaf_size(self) -> int:
+        return self.wq.shape[1]
+
+    @property
+    def n_pad(self) -> int:
+        return self.num_leaves * self.leaf_size
+
+
+def project(w: Array, proj: Array | None) -> Array:
+    """fp32 copy of ``w``, optionally moved to the rank-r sampling space."""
+    w32 = w.astype(jnp.float32)
+    if proj is None:
+        return w32
+    return w32 @ proj.astype(jnp.float32).T
+
+
+def leaf_counts(n_valid: Array, num_leaves: int, leaf_size: int) -> Array:
+    """True (non-padding) class count of each leaf block."""
+    return jnp.clip(
+        n_valid.astype(jnp.float32)
+        - jnp.arange(num_leaves, dtype=jnp.float32) * leaf_size,
+        0.0, float(leaf_size))
+
+
+def build(w: Array, leaf_size: int, *, proj: Array | None = None,
+          n_valid: Array | int | None = None,
+          full_tree: bool = True) -> HierarchyStats:
+    """Build the hierarchy bottom-up: leaf Gram blocks, then pairwise sums.
+
+    w: (n, d) class embeddings.  Cost: one batched matmul for the leaves +
+    O(num_leaves * r^2) for the upper levels.  ``full_tree=True`` rounds the
+    leaf count to a power of two and builds every binary level up to the
+    root; ``full_tree=False`` keeps only the leaf level (the two-level TPU
+    form, whose "root" is a softmax over all leaf blocks).
+    ``n_valid``: number of real classes (rows beyond it must carry no mass);
+    may be a traced scalar for sharded tables with padding rows.
+    """
+    n_rows, _ = w.shape
+    if n_valid is None:
+        n_valid = n_rows
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    wq = project(w, proj)
+    r = wq.shape[-1]
+    if full_tree:
+        leaf_size = next_pow2(leaf_size)
+        num_leaves = next_pow2(max(1, -(-n_rows // leaf_size)))
+    else:
+        num_leaves = -(-n_rows // leaf_size)
+    pad = num_leaves * leaf_size - n_rows
+    wq = jnp.pad(wq, ((0, pad), (0, 0)))
+    # Runtime-zero any rows at/after n_valid (pads must carry no mass).
+    row_ok = jnp.arange(num_leaves * leaf_size) < n_valid
+    wq = jnp.where(row_ok[:, None], wq, 0.0)
+    wq = wq.reshape(num_leaves, leaf_size, r)
+
+    z = jnp.einsum("lbi,lbj->lij", wq, wq)  # (num_leaves, r, r)
+    cnt = leaf_counts(n_valid, num_leaves, leaf_size)
+
+    levels_z = [z]
+    levels_cnt = [cnt]
+    if full_tree:
+        while levels_z[0].shape[0] > 1:
+            child_z = levels_z[0]
+            child_c = levels_cnt[0]
+            levels_z.insert(0, child_z[0::2] + child_z[1::2])
+            levels_cnt.insert(0, child_c[0::2] + child_c[1::2])
+    return HierarchyStats(tuple(levels_z), tuple(levels_cnt), wq, n_valid,
+                          n_rows)
+
+
+def update_rows(stats: HierarchyStats, ids: Array, w_new: Array,
+                proj: Array | None = None) -> HierarchyStats:
+    """Paper Fig. 1b: after embeddings of ``ids`` change to ``w_new``, update
+    the statistics along each leaf->root path with Delta(w w^T).
+
+    ids: (k,) class indices; w_new: (k, d).  Cost O(k * depth * r^2).
+    Duplicate ids are NOT allowed (undefined order of old-row reads).
+    """
+    wq_new = project(w_new, proj)
+    leaf_of = ids // stats.leaf_size
+    off = ids % stats.leaf_size
+    wq_old = stats.wq[leaf_of, off]
+    delta = (jnp.einsum("ki,kj->kij", wq_new, wq_new)
+             - jnp.einsum("ki,kj->kij", wq_old, wq_old))
+    wq = stats.wq.at[leaf_of, off].set(wq_new)
+
+    depth = stats.depth
+    new_z = []
+    for lvl in range(depth + 1):
+        node_of = leaf_of >> (depth - lvl)
+        new_z.append(stats.levels_z[lvl].at[node_of].add(delta))
+    return HierarchyStats(tuple(new_z), stats.levels_cnt, wq, stats.n_valid,
+                          stats.n)
+
+
+# --- flat heap packing (TrainState carriage; DESIGN.md §2.5) -----------------
+
+
+def heap_rows(num_leaves: int) -> int:
+    """Rows of the packed heap: 2^(d+1)-1 nodes padded to an even 2*L."""
+    return 2 * num_leaves
+
+
+def to_heap(stats: HierarchyStats) -> tuple[Array, Array]:
+    """Pack levels root..leaf into flat (2L, r, r) / (2L,) arrays.
+
+    Level l occupies rows [2^l - 1, 2^(l+1) - 1); the final padding row is
+    zero.  The flat layout is what TrainState carries and shards P('model').
+    """
+    r = stats.wq.shape[-1]
+    z = jnp.concatenate(
+        list(stats.levels_z) + [jnp.zeros((1, r, r), jnp.float32)], axis=0)
+    cnt = jnp.concatenate(
+        list(stats.levels_cnt) + [jnp.zeros((1,), jnp.float32)], axis=0)
+    return z, cnt
+
+
+def from_heap(z_heap: Array, cnt_heap: Array, wq: Array, n_valid: Array,
+              n: int | None = None) -> HierarchyStats:
+    """Inverse of ``to_heap``: static slices back into per-level tuples."""
+    num_leaves = wq.shape[0]
+    depth = log2_int(num_leaves)
+    assert z_heap.shape[0] == heap_rows(num_leaves), (
+        z_heap.shape, num_leaves)
+    levels_z, levels_cnt = [], []
+    off = 0
+    for lvl in range(depth + 1):
+        size = 1 << lvl
+        levels_z.append(z_heap[off:off + size])
+        levels_cnt.append(cnt_heap[off:off + size])
+        off += size
+    if n is None:
+        n = num_leaves * wq.shape[1]
+    return HierarchyStats(tuple(levels_z), tuple(levels_cnt), wq,
+                          jnp.asarray(n_valid, jnp.int32), n)
+
+
+# --- level-synchronous batched descent (DESIGN.md §2.6) ----------------------
+
+
+def _mass_table(kernel: SamplingKernel, z: Array, cnt: Array, hq: Array,
+                use_kernels: bool) -> Array:
+    """Kernel mass of EVERY node at one level for every query: (T, nodes)."""
+    if use_kernels:
+        from repro.kernels import ops
+        return ops.block_scores(hq, z, cnt, alpha=kernel.alpha)
+    quad = jnp.einsum("nij,ti,tj->tn", z, hq, hq)
+    return kernel.alpha * quad + cnt[None, :]
+
+
+def _gathered_mass(kernel: SamplingKernel, z: Array, cnt: Array, hq: Array,
+                   nodes: Array) -> Array:
+    """Kernel mass of per-draw gathered nodes: hq (T, r), nodes (T, m)."""
+
+    def one_query(h, idx_row):
+        return jax.vmap(lambda i: gram_set_mass(kernel, z[i], cnt[i], h))(
+            idx_row)
+
+    return jax.vmap(one_query)(hq, nodes)
+
+
+def leaf_logits(stats: HierarchyStats, kernel: SamplingKernel, hq: Array,
+                leaf_idx: Array, use_kernels: bool) -> Array:
+    """Exact within-leaf kernel log-scores, padding masked to -inf.
+
+    hq: (T, r); leaf_idx: (T, m) -> (T, m, leaf_size).
+    """
+    t, m = leaf_idx.shape
+    b = stats.leaf_size
+    rows = stats.wq[leaf_idx]  # (T, m, B, r)
+    if use_kernels:
+        from repro.kernels import ops
+        flat_rows = rows.reshape(t * m, b, -1)
+        flat_h = jnp.repeat(hq, m, axis=0)  # (T*m, r), row t repeated m times
+        scores = ops.leaf_scores(flat_h, flat_rows,
+                                 alpha=kernel.alpha).reshape(t, m, b)
+    else:
+        dots = jnp.einsum("tmbr,tr->tmb", rows, hq)
+        scores = kernel.of_dot(dots)
+    ids = leaf_idx[..., None] * b + jnp.arange(b)
+    scores = jnp.where(ids < stats.n_valid, scores, 0.0)
+    return jnp.where(scores > 0, jnp.log(jnp.maximum(scores, 1e-30)),
+                     -jnp.inf)
+
+
+def descend(stats: HierarchyStats, kernel: SamplingKernel, hq: Array,
+            keys: Array, *, use_kernels: bool | None = None,
+            dense_cap: int | None = None) -> tuple[Array, Array]:
+    """Level-synchronous batched descent: (T, m) draws, depth+1 steps total.
+
+    hq:   (T, r) projected queries.
+    keys: (T, m) PRNG keys, one per draw — the SAME key layout the sequential
+          per-draw descent consumes, so a fixed key yields identical draws.
+
+    Each level is ONE batched mass evaluation: levels with at most
+    ``dense_cap`` nodes compute the full (T, nodes) table (routed through the
+    ``block_scores`` Pallas kernel when ``use_kernels``) and gather the two
+    child masses per draw; deeper levels gather per-draw child statistics
+    directly (O(T m r^2), the paper's per-draw bound).  ``dense_cap=0``
+    forces the gathered form everywhere — arithmetic-identical to the
+    sequential reference.  The within-leaf categorical routes through the
+    ``leaf_scores`` Pallas kernel.
+
+    Returns ids: (T, m) int32 and logq: (T, m) exact log sampling
+    probabilities (telescoping product of eq. 9 + within-leaf conditional).
+    """
+    assert kernel.degree == 2, "hierarchy statistics require a degree-2 kernel"
+    if use_kernels is None:
+        # Off-TPU the Pallas kernels run in interpret mode (correctness
+        # validation only, ~10x slower than XLA); route through them only
+        # where they are compiled.
+        use_kernels = jax.default_backend() == "tpu"
+    # Draws are non-differentiable by contract (the loss stop-gradients the
+    # sampled ids/logq); cut the tape here so the Pallas kernels never see
+    # tangents (pallas_call has no JVP rule).
+    hq = jax.lax.stop_gradient(hq)
+    t, m = keys.shape[0], keys.shape[1]
+    depth = stats.depth
+    if dense_cap is None:
+        # Dense tables cost T*nodes*r^2 contiguous flops; the gathered form
+        # costs ~2*T*m*r^2 scattered ones.  Prefer dense until the level is
+        # several times wider than the draw count.
+        dense_cap = max(256, 4 * m)
+    # Per-draw, per-level keys: identical split tree to the sequential path.
+    klev = jax.vmap(jax.vmap(lambda k: jax.random.split(k, depth + 1)))(keys)
+
+    idx = jnp.zeros((t, m), jnp.int32)
+    logq = jnp.zeros((t, m), jnp.float32)
+    for lvl in range(1, depth + 1):
+        z = stats.levels_z[lvl]
+        cnt = stats.levels_cnt[lvl]
+        left, right = 2 * idx, 2 * idx + 1
+        if z.shape[0] <= dense_cap:
+            table = _mass_table(kernel, z, cnt, hq, use_kernels)
+            mass_l = jnp.take_along_axis(table, left, axis=1)
+            mass_r = jnp.take_along_axis(table, right, axis=1)
+        else:
+            mass_l = _gathered_mass(kernel, z, cnt, hq, left)
+            mass_r = _gathered_mass(kernel, z, cnt, hq, right)
+        # Numerical floor: padding-only subtrees have exactly zero mass.
+        p_r = mass_r / jnp.maximum(mass_l + mass_r, 1e-30)
+        go_right = jax.vmap(jax.vmap(jax.random.bernoulli))(
+            klev[:, :, lvl - 1], p_r)
+        idx = jnp.where(go_right, right, left)
+        logq = logq + jnp.log(jnp.where(go_right, p_r, 1.0 - p_r))
+
+    logits = leaf_logits(stats, kernel, hq, idx, use_kernels)
+    within = jax.vmap(jax.vmap(jax.random.categorical))(
+        klev[:, :, depth], logits)
+    log_within = jnp.take_along_axis(
+        jax.nn.log_softmax(logits, axis=-1), within[..., None], axis=-1
+    )[..., 0]
+    ids = idx * stats.leaf_size + within
+    return ids.astype(jnp.int32), logq + log_within
+
+
+def all_class_logq(stats: HierarchyStats, kernel: SamplingKernel,
+                   hq: Array) -> Array:
+    """Exact log-probability the hierarchy assigns to EVERY class (oracle).
+
+    Computes node probabilities level by level (parent prob x branch prob)
+    and multiplies by the within-leaf conditional.  O(n r^2) — test use only.
+    hq: (r,) one projected query.  Returns (n,) for the static row bound n.
+    """
+    log_node_prev = jnp.zeros((1,))
+    for lvl in range(stats.depth + 1):
+        mass = gram_set_mass(kernel, stats.levels_z[lvl],
+                             stats.levels_cnt[lvl], hq)
+        lm = jnp.log(jnp.maximum(mass, 1e-30))
+        if lvl == 0:
+            log_node = jnp.zeros((lm.shape[0],))
+        else:
+            parent = jnp.repeat(log_node_prev, 2)
+            sibling_sum = jnp.repeat(jnp.logaddexp(lm[0::2], lm[1::2]), 2)
+            log_node = parent + lm - sibling_sum
+        log_node_prev = log_node
+    # Within-leaf conditionals.
+    scores = kernel.of_dot(jnp.einsum("lbr,r->lb", stats.wq, hq))
+    ids = (jnp.arange(stats.num_leaves)[:, None] * stats.leaf_size
+           + jnp.arange(stats.leaf_size)[None, :])
+    scores = jnp.where(ids < stats.n_valid, scores, 0.0)
+    logit = jnp.where(scores > 0, jnp.log(jnp.maximum(scores, 1e-30)),
+                      -jnp.inf)
+    # Entirely-dead leaves (all rows at/after n_valid) would NaN through
+    # log_softmax; their entries are exactly zero-probability.
+    log_within = jnp.where(jnp.isneginf(logit), -jnp.inf,
+                           jax.nn.log_softmax(logit, axis=-1))
+    out = (log_node_prev[:, None] + log_within).reshape(-1)
+    return out[: stats.n]

@@ -171,7 +171,14 @@ def quartic_oracle(alpha: float = 1.0) -> LogitOracleSampler:
 
 @dataclasses.dataclass(frozen=True)
 class TreeSampler(Sampler):
-    """Paper §3.2: divide & conquer over a binary tree of Gram statistics."""
+    """Paper §3.2: divide & conquer over a binary tree of Gram statistics.
+
+    Sampling is the level-synchronous batched descent (DESIGN.md §2.6):
+    ``sample_batch`` advances all (T, m) draws one tree level per step, with
+    the dense upper levels and the within-leaf categorical routed through
+    the Pallas kernels.  A first-class citizen of the train island — the
+    train step carries its statistics heap-packed exactly like block stats.
+    """
 
     kernel: SamplingKernel = dataclasses.field(
         default_factory=quadratic_kernel)
@@ -199,6 +206,14 @@ class TreeSampler(Sampler):
     def sample(self, state, h, m, key):
         return tree.sample(state["stats"], self.kernel, h, m, key,
                            state["proj"])
+
+    def sample_batch(self, state, h, m, key):
+        # Natively batched: no outer vmap-of-vmap.  Consumes the same key
+        # tree as the generic per-query path (identical draws whenever the
+        # level masses agree bitwise — guaranteed under dense_cap=0; the
+        # dense-table path is equal in distribution).
+        return tree.sample_batch(state["stats"], self.kernel, h, m, key,
+                                 state["proj"])
 
 
 @dataclasses.dataclass(frozen=True)

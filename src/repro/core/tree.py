@@ -7,114 +7,98 @@ root-to-leaf descent that samples each child with probability
 exactly in the original space (Fig. 1c), and O(D log n) path updates after an
 embedding changes (Fig. 1b).
 
-Statistics for the quadratic kernel are stored as Gram-sum matrices
-(DESIGN.md §2.1), so a level-``l`` node costs d^2 floats and the whole tree
-O(n d) — matching the paper's memory bound.
+The statistics themselves (Gram-sum levels, padding/count bookkeeping, path
+updates) live in the shared hierarchy core (``core/hierarchy.py``, DESIGN.md
+§2.1/§2.6) — the same object the two-level block sampler views at depth 0.
 
-Everything is expressed as dense per-level arrays so the descent is a
-vmap-able gather/compare chain (no pointers): level ``l`` holds 2^l nodes;
-children of node ``i`` at level ``l`` are nodes ``2i`` and ``2i+1`` at level
-``l+1``.
+Sampling is LEVEL-SYNCHRONOUS and batched (DESIGN.md §2.6): all (T, m)
+in-flight draws advance one tree level per step, so a whole batch of draws
+costs ``depth + 1`` batched steps instead of ``T * m * depth`` sequential
+Bernoulli draws.  ``sample_sequential`` keeps the original per-draw descent
+as the equivalence/benchmark reference — under a fixed key both paths make
+identical draws.
 
 An optional fixed projection ``P: (r, d)`` moves sampling into a rank-r space
 (DESIGN.md §2.3); pass ``proj=None`` for the paper-exact sampler.
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 
+from repro.core import hierarchy
+from repro.core.hierarchy import HierarchyStats as TreeStats  # noqa: F401
 from repro.core.kernel_fns import SamplingKernel, gram_set_mass
-from repro.utils.misc import log2_int, next_pow2
 
 Array = jax.Array
 
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
-class TreeStats:
-    """Per-level Gram statistics + the (possibly projected) sampling table.
-
-    levels_z:   tuple over levels 0..depth of (2^l, r, r) Gram sums.
-    levels_cnt: tuple over levels of (2^l,) true (non-padding) class counts.
-    wq:         (n_pad, r) sampling copy of the class embeddings (projected if
-                proj is not None; zero rows for padding).  Leaf scoring and
-                therefore the reported log-q are exact w.r.t. this copy.
-    n:          true number of classes (static).
-    leaf_size:  classes per leaf (the paper's O(D/d) leaf sets; static).
-    """
-
-    levels_z: tuple[Array, ...]
-    levels_cnt: tuple[Array, ...]
-    wq: Array
-    n: int = dataclasses.field(metadata=dict(static=True))
-    leaf_size: int = dataclasses.field(metadata=dict(static=True))
-
-    @property
-    def depth(self) -> int:
-        return len(self.levels_z) - 1
-
-    @property
-    def num_leaves(self) -> int:
-        return self.levels_z[-1].shape[0]
-
-
-def _project(w: Array, proj: Array | None) -> Array:
-    w32 = w.astype(jnp.float32)
-    if proj is None:
-        return w32
-    return w32 @ proj.astype(jnp.float32).T
+_project = hierarchy.project
 
 
 def build(w: Array, kernel: SamplingKernel, leaf_size: int | None = None,
-          proj: Array | None = None) -> TreeStats:
+          proj: Array | None = None,
+          n_valid: Array | int | None = None) -> TreeStats:
     """Build the tree bottom-up: leaf Gram blocks, then pairwise sums.
 
     w: (n, d) class embeddings.  Cost: one batched matmul for the leaves +
-    O(n/leaf * r^2) for the upper levels.
+    O(n/leaf * r^2) for the upper levels.  ``n_valid`` (optional, may be
+    traced) marks trailing padding rows of sharded tables.
     """
     assert kernel.degree == 2, "tree statistics require the quadratic kernel"
     n, _ = w.shape
-    wq = _project(w, proj)
-    r = wq.shape[-1]
     if leaf_size is None:
         # Paper Fig. 1c: stop splitting at |C| = O(D/d); D = r^2 here.
+        r = proj.shape[0] if proj is not None else w.shape[1]
         leaf_size = max(2, min(n, r))
-    leaf_size = next_pow2(leaf_size)
-    num_leaves = next_pow2(max(1, -(-n // leaf_size)))
-    n_pad = num_leaves * leaf_size
-    pad = n_pad - n
-    wq = jnp.pad(wq, ((0, pad), (0, 0)))
-
-    blocks = wq.reshape(num_leaves, leaf_size, r)
-    z = jnp.einsum("lbi,lbj->lij", blocks, blocks)  # (num_leaves, r, r)
-    counts = jnp.clip(
-        jnp.asarray(n, jnp.float32)
-        - jnp.arange(num_leaves, dtype=jnp.float32) * leaf_size,
-        0.0, float(leaf_size))
-
-    levels_z = [z]
-    levels_cnt = [counts]
-    while levels_z[0].shape[0] > 1:
-        child_z = levels_z[0]
-        child_c = levels_cnt[0]
-        parent_z = child_z[0::2] + child_z[1::2]
-        parent_c = child_c[0::2] + child_c[1::2]
-        levels_z.insert(0, parent_z)
-        levels_cnt.insert(0, parent_c)
-    return TreeStats(tuple(levels_z), tuple(levels_cnt), wq, n, leaf_size)
+    return hierarchy.build(w, leaf_size, proj=proj, n_valid=n_valid,
+                           full_tree=True)
 
 
-def _leaf_scores(stats: TreeStats, kernel: SamplingKernel, hq: Array,
-                 leaf_idx: Array) -> Array:
+def sample_batch(stats: TreeStats, kernel: SamplingKernel, h: Array, m: int,
+                 key: Array, proj: Array | None = None, *,
+                 use_kernels: bool | None = None,
+                 dense_cap: int | None = None) -> tuple[Array, Array]:
+    """Draw m classes i.i.d. per query, for a whole batch h: (T, d), with
+    the level-synchronous batched descent (DESIGN.md §2.6).
+
+    Key layout matches the generic ``Sampler.sample_batch`` contract (split
+    over T, then over m), so this is draw-for-draw identical to vmapping the
+    per-query sampler.  Returns ids: (T, m) int32 and logq: (T, m) exact log
+    sampling probabilities.
+    """
+    hq = _project(h, proj)
+    kt = jax.random.split(key, h.shape[0])
+    keys = jax.vmap(lambda k: jax.random.split(k, m))(kt)  # (T, m) keys
+    return hierarchy.descend(stats, kernel, hq, keys, use_kernels=use_kernels,
+                             dense_cap=dense_cap)
+
+
+def sample(stats: TreeStats, kernel: SamplingKernel, h: Array, m: int,
+           key: Array, proj: Array | None = None, *,
+           use_kernels: bool | None = None,
+           dense_cap: int | None = None) -> tuple[Array, Array]:
+    """Draw m classes i.i.d. (with replacement) for one query h: (d,).
+
+    Returns ids: (m,) int32 and logq: (m,) exact log sampling probabilities.
+    """
+    hq = _project(h[None], proj)
+    keys = jax.random.split(key, m)[None]  # (1, m) keys
+    ids, logq = hierarchy.descend(stats, kernel, hq, keys,
+                                  use_kernels=use_kernels,
+                                  dense_cap=dense_cap)
+    return ids[0], logq[0]
+
+
+# --- sequential reference (the paper's per-draw descent) ---------------------
+
+
+def _leaf_scores_one(stats: TreeStats, kernel: SamplingKernel, hq: Array,
+                     leaf_idx: Array) -> Array:
     """Exact kernel scores of one leaf block, padding masked to 0."""
-    start = leaf_idx * stats.leaf_size
-    rows = jax.lax.dynamic_slice_in_dim(stats.wq, start, stats.leaf_size, 0)
+    rows = stats.wq[leaf_idx]  # (leaf_size, r)
     scores = kernel.of_dot(rows @ hq)  # (leaf_size,)
-    ids = start + jnp.arange(stats.leaf_size)
-    return jnp.where(ids < stats.n, scores, 0.0)
+    ids = leaf_idx * stats.leaf_size + jnp.arange(stats.leaf_size)
+    return jnp.where(ids < stats.n_valid, scores, 0.0)
 
 
 def _descend_one(stats: TreeStats, kernel: SamplingKernel, hq: Array,
@@ -138,7 +122,7 @@ def _descend_one(stats: TreeStats, kernel: SamplingKernel, hq: Array,
         go_right = jax.random.bernoulli(keys[lvl - 1], p_r)
         idx = jnp.where(go_right, right, left)
         logq = logq + jnp.log(jnp.where(go_right, p_r, 1.0 - p_r))
-    scores = _leaf_scores(stats, kernel, hq, idx)
+    scores = _leaf_scores_one(stats, kernel, hq, idx)
     logits = jnp.log(jnp.maximum(scores, 1e-30))
     logits = jnp.where(scores > 0, logits, -jnp.inf)
     within = jax.random.categorical(keys[-1], logits)
@@ -146,52 +130,27 @@ def _descend_one(stats: TreeStats, kernel: SamplingKernel, hq: Array,
     return idx * stats.leaf_size + within, logq + log_p_within
 
 
-def sample(stats: TreeStats, kernel: SamplingKernel, h: Array, m: int,
-           key: Array, proj: Array | None = None) -> tuple[Array, Array]:
-    """Draw m classes i.i.d. (with replacement) for one query h: (d,).
-
-    Returns ids: (m,) int32 and logq: (m,) exact log sampling probabilities.
-    """
+def sample_sequential(stats: TreeStats, kernel: SamplingKernel, h: Array,
+                      m: int, key: Array, proj: Array | None = None
+                      ) -> tuple[Array, Array]:
+    """The original per-draw, per-query descent (equivalence + benchmark
+    reference): m independent root-to-leaf walks for one query h: (d,)."""
     hq = _project(h[None], proj)[0]
     keys = jax.random.split(key, m)
     ids, logq = jax.vmap(lambda k: _descend_one(stats, kernel, hq, k))(keys)
     return ids.astype(jnp.int32), logq
 
 
+# --- oracles / updates -------------------------------------------------------
+
+
 def all_class_logq(stats: TreeStats, kernel: SamplingKernel, h: Array,
                    proj: Array | None = None) -> Array:
     """Exact log-probability the tree assigns to EVERY class (test oracle).
 
-    Computes node probabilities level by level (parent prob x branch prob)
-    and multiplies by the within-leaf conditional.  O(n r^2) — test use only.
-    """
+    O(n r^2) — test use only."""
     hq = _project(h[None], proj)[0]
-    log_mass = None
-    for lvl in range(stats.depth + 1):
-        mass = gram_set_mass(kernel, stats.levels_z[lvl],
-                             stats.levels_cnt[lvl], hq)
-        lm = jnp.log(jnp.maximum(mass, 1e-30))
-        if log_mass is None:
-            log_node = jnp.zeros((1,))
-        else:
-            parent = jnp.repeat(log_node_prev, 2)
-            sibling_sum = jnp.repeat(
-                jnp.logaddexp(lm[0::2], lm[1::2]), 2)
-            log_node = parent + lm - sibling_sum
-        log_node_prev = log_node
-        log_mass = lm
-    # Within-leaf conditionals.
-    scores = kernel.of_dot(
-        jnp.einsum("lbr,r->lb",
-                   stats.wq.reshape(stats.num_leaves, stats.leaf_size, -1),
-                   hq))
-    ids = (jnp.arange(stats.num_leaves)[:, None] * stats.leaf_size
-           + jnp.arange(stats.leaf_size)[None, :])
-    scores = jnp.where(ids < stats.n, scores, 0.0)
-    logit = jnp.where(scores > 0, jnp.log(jnp.maximum(scores, 1e-30)), -jnp.inf)
-    log_within = jax.nn.log_softmax(logit, axis=-1)
-    out = (log_node_prev[:, None] + log_within).reshape(-1)
-    return out[: stats.n]
+    return hierarchy.all_class_logq(stats, kernel, hq)
 
 
 def update_path(stats: TreeStats, kernel: SamplingKernel, ids: Array,
@@ -203,17 +162,4 @@ def update_path(stats: TreeStats, kernel: SamplingKernel, ids: Array,
     Duplicate ids are NOT allowed (undefined order of old-row reads).
     """
     assert kernel.degree == 2
-    wq_new = _project(w_new, proj)
-    wq_old = stats.wq[ids]
-    delta = (jnp.einsum("ki,kj->kij", wq_new, wq_new)
-             - jnp.einsum("ki,kj->kij", wq_old, wq_old))
-    wq = stats.wq.at[ids].set(wq_new)
-
-    leaf_of = ids // stats.leaf_size
-    new_z = []
-    for lvl in range(stats.depth + 1):
-        node_of = leaf_of >> (stats.depth - lvl)
-        z = stats.levels_z[lvl]
-        new_z.append(z.at[node_of].add(delta))
-    return TreeStats(tuple(new_z), stats.levels_cnt, wq, stats.n,
-                     stats.leaf_size)
+    return hierarchy.update_rows(stats, ids, w_new, proj)

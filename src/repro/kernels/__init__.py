@@ -2,7 +2,10 @@
 
   zstats        — per-block Gram matrices  Z_b = W_b^T W_b  (stats refresh)
   block_scores  — batched quadratic forms  alpha * h^T Z_b h + cnt  (root
-                  level of the two-level sampler)
+                  level of the two-level sampler and the dense upper levels
+                  of the level-synchronous tree descent)
+  leaf_scores   — per-draw within-leaf kernel scores for gathered leaf
+                  blocks (leaf level of the batched descent, DESIGN.md §2.6)
   sampled_loss  — fused corrected sampled-softmax loss: logits + eq. 2
                   correction + online logsumexp, never materializing (T, m)
                   logits in HBM

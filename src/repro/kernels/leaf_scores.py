@@ -1,0 +1,53 @@
+"""Pallas kernel: per-draw within-leaf quadratic-kernel scores — the leaf
+level of the level-synchronous descent (DESIGN.md §2.6).
+
+    scores[g, b] = alpha * (rows[g, b, :] . h[g, :])^2 + 1
+
+for G gathered leaf blocks rows: (G, B, r), one query per draw h: (G, r).
+Grid is one dimension of G tiles; each step loads a (Gt, B, r) block tile and
+its (Gt, r) query tile into VMEM.  The contraction is a batched matvec —
+elementwise multiply + lane reduction on the VPU (B*r flops per draw; the MXU
+has nothing to batch over since every draw owns a distinct leaf block).
+Padding rows inside a leaf are zero, so they score exactly alpha*0+1; the
+caller (``hierarchy.leaf_logits``) masks them to zero mass with its
+``n_valid`` grid — this kernel and its ops.py wrapper return raw scores.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _leaf_scores_kernel(alpha, h_ref, rows_ref, out_ref):
+    h = h_ref[...].astype(jnp.float32)          # (Gt, r)
+    rows = rows_ref[...].astype(jnp.float32)    # (Gt, B, r)
+    dots = jnp.sum(rows * h[:, None, :], axis=-1)  # (Gt, B)
+    out_ref[...] = alpha * dots * dots + 1.0
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "g_tile", "interpret"))
+def leaf_scores(h: Array, rows: Array, *, alpha: float = 100.0,
+                g_tile: int = 128, interpret: bool = False) -> Array:
+    """h: (G, r); rows: (G, B, r) -> (G, B) fp32 quadratic-kernel scores.
+
+    G must divide by g_tile (ops.py pads)."""
+    g, r = h.shape
+    b = rows.shape[1]
+    assert g % g_tile == 0, (g, g_tile)
+    kernel = functools.partial(_leaf_scores_kernel, alpha)
+    return pl.pallas_call(
+        kernel,
+        grid=(g // g_tile,),
+        in_specs=[
+            pl.BlockSpec((g_tile, r), lambda i: (i, 0)),
+            pl.BlockSpec((g_tile, b, r), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((g_tile, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, b), jnp.float32),
+        interpret=interpret,
+    )(h, rows)

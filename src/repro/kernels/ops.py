@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.kernels.block_scores import block_scores as _block_scores
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.leaf_scores import leaf_scores as _leaf_scores
 from repro.kernels.sampled_loss import sampled_loss as _sampled_loss
 from repro.kernels.zstats import zstats as _zstats
 
@@ -52,6 +53,17 @@ def block_scores(h: Array, z: Array, cnt: Array,
                         t_tile=min(t_tile, hp.shape[0]),
                         n_tile=n_tile, interpret=_interpret())
     return out[:t, :n]
+
+
+def leaf_scores(h: Array, rows: Array, alpha: float = 100.0) -> Array:
+    """h: (G, r); rows: (G, B, r) -> (G, B) quadratic-kernel scores."""
+    g_tile = min(128, max(8, 1 << (h.shape[0] - 1).bit_length()))
+    hp, g = _pad_to(h, 0, g_tile)
+    rp, _ = _pad_to(rows, 0, g_tile)
+    out = _leaf_scores(hp, rp, alpha=alpha,
+                       g_tile=min(g_tile, hp.shape[0]),
+                       interpret=_interpret())
+    return out[:g]
 
 
 def sampled_loss(h: Array, w_neg: Array, logq: Array, pos_logit: Array,

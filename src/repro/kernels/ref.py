@@ -21,6 +21,13 @@ def block_scores_ref(h: Array, z: Array, cnt: Array, alpha: float) -> Array:
     return alpha * quad + cnt[None, :]
 
 
+def leaf_scores_ref(h: Array, rows: Array, alpha: float) -> Array:
+    """h: (G, r); rows: (G, B, r) -> (G, B) quadratic-kernel scores."""
+    dots = jnp.einsum("gbr,gr->gb", rows.astype(jnp.float32),
+                      h.astype(jnp.float32))
+    return alpha * jnp.square(dots) + 1.0
+
+
 def sampled_loss_ref(h: Array, w_neg: Array, logq: Array, pos_logit: Array,
                      m_total: int) -> Array:
     """Corrected sampled softmax with shared negatives (paper eq. 2-3).

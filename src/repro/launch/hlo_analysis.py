@@ -46,6 +46,24 @@ _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
 
+def _split_top_level(s: str) -> list[str]:
+    """Split an operand list on commas OUTSIDE brackets (shape dims contain
+    commas: ``f32[128,256]{1,0} %a, f32[256,64]{1,0} %b``)."""
+    parts, cur, depth = [], [], 0
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    parts.append("".join(cur))
+    return parts
+
+
 def _bytes_of(shape_str: str) -> int:
     total = 0
     for dt, dims in _SHAPE_RE.findall(shape_str):
@@ -128,9 +146,13 @@ def _analyze_comp(lines: list[str]) -> CompStats:
             contract = 1
             ops_m = re.search(r"dot\(([^)]*)\)", line)
             if ct and ops_m:
-                lhs_name = ops_m.group(1).split(",")[0].strip()
-                lhs_name = lhs_name.split(" ")[-1]
-                lhs_shape = _dims_of(shapes.get(lhs_name, ""))
+                lhs_tok = _split_top_level(ops_m.group(1))[0].strip()
+                # Newer HLO prints operand shapes inline
+                # (``f32[128,256]{1,0} %Arg_0.1``); older prints names only.
+                lhs_shape = _dims_of(lhs_tok)
+                if not lhs_shape:
+                    lhs_shape = _dims_of(
+                        shapes.get(lhs_tok.split(" ")[-1], ""))
                 for idx in ct.group(1).split(","):
                     if idx and lhs_shape:
                         i = int(idx)

@@ -21,6 +21,7 @@ from repro.configs.base import ArchConfig
 from repro.core import distributed
 from repro.models import api, encdec, transformer
 from repro.sharding.rules import ShardCtx, param_specs_for
+from repro.utils.compat import shard_map
 
 Array = jax.Array
 
@@ -54,7 +55,7 @@ def _argmax_island(cfg: ArchConfig, ctx: ShardCtx, head, h2d):
             head_full, h_l, axis_name=mdl, bias_local=bias)
         return ids
 
-    return jax.shard_map(
+    return shard_map(
         island, mesh=ctx.mesh, check_vma=False,
         in_specs=(P(mdl, head_dsp), P(dataspec, None)),
         out_specs=P(dataspec))(head, h2d)

@@ -29,13 +29,14 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.core import blocks, distributed
+from repro.core import blocks, distributed, hierarchy, tree
 from repro.core.kernel_fns import quadratic_kernel, quartic_kernel
 from repro.core.sampled_softmax import sampled_softmax_from_embeddings
 from repro.core.samplers import (
     BlockSampler,
     LogitOracleSampler,
     Sampler,
+    TreeSampler,
     UniformSampler,
     make_sampler,
 )
@@ -43,6 +44,8 @@ from repro.models import api
 from repro.models.transformer import padded_vocab
 from repro.optim.transform import GradientTransform, apply_updates
 from repro.sharding.rules import ShardCtx, param_specs_for
+from repro.utils.compat import shard_map
+from repro.utils.misc import next_pow2
 
 Array = jax.Array
 
@@ -50,11 +53,23 @@ Array = jax.Array
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class TrainState:
+    """Carried training state.
+
+    The sampler statistics triple is laid out per sampler family, always
+    sharded P('model') over the leading axis:
+      block:  z (tp * n_blocks_l, r, r), cnt (tp * n_blocks_l,),
+              wq (tp * n_blocks_l, B, r)
+      tree:   z/cnt are the heap-packed per-level Gram stats
+              (tp * 2*L_l, r, r) / (tp * 2*L_l,)  [hierarchy.to_heap], and
+              wq (tp * L_l, leaf, r) the per-shard leaf table — the top
+              log2(tp) tree levels ARE the TP axis (DESIGN.md §2.5).
+    """
+
     params: Any
     opt_state: Any
-    sampler_z: Array | None      # (tp * n_blocks_l, r, r) P('model')
-    sampler_cnt: Array | None    # (tp * n_blocks_l,)      P('model')
-    sampler_wq: Array | None     # (tp * n_blocks_l, B, r) P('model')
+    sampler_z: Array | None      # see layout note above   P('model')
+    sampler_cnt: Array | None    # see layout note above   P('model')
+    sampler_wq: Array | None     # see layout note above   P('model')
     proj: Array | None           # (r, d) replicated; None = unprojected
     step: Array                  # () int32
 
@@ -66,6 +81,13 @@ def sampler_from_cfg(cfg: ArchConfig) -> Sampler:
             name,
             kernel=quadratic_kernel(cfg.sampler_alpha),
             block_size=cfg.sampler_block,
+            proj_rank=cfg.sampler_proj_rank,
+        )
+    if name == "tree-quadratic":
+        return make_sampler(
+            name,
+            kernel=quadratic_kernel(cfg.sampler_alpha),
+            leaf_size=cfg.sampler_block,
             proj_rank=cfg.sampler_proj_rank,
         )
     if name == "quadratic-oracle":
@@ -83,19 +105,59 @@ def _sampler_dims(cfg: ArchConfig, tp: int) -> tuple[int, int, int]:
     return v_l, n_blocks_l, r
 
 
+def _tree_dims(cfg: ArchConfig, tp: int) -> tuple[int, int, int, int]:
+    """(rows per shard, leaves per shard, leaf size, sampling rank r)."""
+    v_l, _, r = _sampler_dims(cfg, tp)
+    leaf = next_pow2(cfg.sampler_block)
+    num_leaves_l = next_pow2(max(1, -(-v_l // leaf)))
+    return v_l, num_leaves_l, leaf, r
+
+
+def _stat_shapes(cfg: ArchConfig, sampler: Sampler, tp: int
+                 ) -> tuple[tuple, tuple, tuple]:
+    """Global shapes of the carried (z, cnt, wq) triple (sharded P('model'))."""
+    if isinstance(sampler, TreeSampler):
+        _, num_leaves_l, leaf, r = _tree_dims(cfg, tp)
+        rows = hierarchy.heap_rows(num_leaves_l)
+        return ((tp * rows, r, r), (tp * rows,), (tp * num_leaves_l, leaf, r))
+    _, n_blocks_l, r = _sampler_dims(cfg, tp)
+    bs = cfg.sampler_block
+    return ((tp * n_blocks_l, r, r), (tp * n_blocks_l,),
+            (tp * n_blocks_l, bs, r))
+
+
+def _build_stat_arrays(sampler: Sampler, cfg: ArchConfig, head_full: Array,
+                       n_valid, proj) -> tuple[Array, Array, Array]:
+    """Fresh (z, cnt, wq) carry arrays from the gathered local head shard."""
+    if isinstance(sampler, TreeSampler):
+        hs = hierarchy.build(head_full, next_pow2(cfg.sampler_block),
+                             proj=proj, n_valid=n_valid, full_tree=True)
+        z, cnt = hierarchy.to_heap(hs)
+        return z, cnt, hs.wq
+    stats = blocks.build(head_full, cfg.sampler_block, proj, n_valid)
+    return stats.z, stats.cnt, stats.wq
+
+
+def _stats_from_arrays(sampler: Sampler, z, cnt, wq, n_valid):
+    """Rehydrate the carried (z, cnt, wq) triple into sampler statistics."""
+    if isinstance(sampler, TreeSampler):
+        return hierarchy.from_heap(z, cnt, wq, n_valid)
+    return blocks.BlockStats(z, cnt, wq, n_valid)
+
+
 def _local_stats(sampler: Sampler, cfg: ArchConfig, head_full: Array,
                  z, cnt, wq, n_valid, proj, refresh: Array | None):
-    """Local sampler state for the island.  For block samplers, either
+    """Local sampler state for the island.  For block/tree samplers, either
     rebuild from the gathered head or reuse carried stats."""
-    if isinstance(sampler, BlockSampler):
-        new = blocks.build(head_full, cfg.sampler_block, proj, n_valid)
+    if isinstance(sampler, (BlockSampler, TreeSampler)):
+        new = _build_stat_arrays(sampler, cfg, head_full, n_valid, proj)
         if refresh is None or z is None:
-            stats = new
+            z, cnt, wq = new
         else:
-            keep = blocks.BlockStats(z, cnt, wq, n_valid)
-            stats = jax.tree_util.tree_map(
-                lambda a, b: jnp.where(refresh, a, b), new, keep)
-        return {"stats": stats, "proj": proj}, stats
+            z, cnt, wq = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(refresh, a, b), new, (z, cnt, wq))
+        stats = _stats_from_arrays(sampler, z, cnt, wq, n_valid)
+        return {"stats": stats, "proj": proj}, (z, cnt, wq)
     if isinstance(sampler, UniformSampler):
         return {"n": head_full.shape[0]}, None
     if isinstance(sampler, LogitOracleSampler):
@@ -116,11 +178,15 @@ def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
     pure_fsdp = ctx.mode == "pure_fsdp"
     v_l, n_blocks_l, r = _sampler_dims(cfg, tp)
 
-    carries_stats = isinstance(sampler, BlockSampler)
+    carries_stats = isinstance(sampler, (BlockSampler, TreeSampler))
     mdl = ctx.model_axis
 
     # --- stats refresh (no gradients; runs once per step, before the
     # microbatch loop, so all microbatches sample from the SAME q) ----------
+    def _merge_refresh(new, keep, refresh):
+        return jax.tree_util.tree_map(
+            lambda a_, b_: jnp.where(refresh, a_, b_), new, keep)
+
     def refresh_island(head, z, cnt, wq, proj, refresh):
         proj_l = proj if cfg.sampler_proj_rank else None
         my = lax.axis_index(mdl)
@@ -128,11 +194,8 @@ def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
         for a in ctx.data_axes[::-1]:
             head_full = lax.all_gather(head_full, a, axis=1, tiled=True)
         n_valid = jnp.clip(cfg.vocab_size - my * v_l, 0, v_l)
-        new = blocks.build(head_full, cfg.sampler_block, proj_l, n_valid)
-        keep = blocks.BlockStats(z, cnt, wq, n_valid)
-        stats = jax.tree_util.tree_map(
-            lambda a_, b_: jnp.where(refresh, a_, b_), new, keep)
-        return stats.z, stats.cnt, stats.wq
+        new = _build_stat_arrays(sampler, cfg, head_full, n_valid, proj_l)
+        return _merge_refresh(new, (z, cnt, wq), refresh)
 
     def refresh_stats(head, z, cnt, wq, proj, refresh):
         if not carries_stats:
@@ -141,13 +204,10 @@ def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
         if mesh is None:
             n_valid = jnp.asarray(cfg.vocab_size, jnp.int32)
             proj_l = proj if cfg.sampler_proj_rank else None
-            new = blocks.build(head, cfg.sampler_block, proj_l, n_valid)
-            keep = blocks.BlockStats(z, cnt, wq, n_valid)
-            stats = jax.tree_util.tree_map(
-                lambda a_, b_: jnp.where(refresh, a_, b_), new, keep)
-            return stats.z, stats.cnt, stats.wq
+            new = _build_stat_arrays(sampler, cfg, head, n_valid, proj_l)
+            return _merge_refresh(new, (z, cnt, wq), refresh)
         pj = proj if proj is not None else jnp.zeros((), jnp.float32)
-        return jax.shard_map(
+        return shard_map(
             refresh_island, mesh=mesh, check_vma=False,
             in_specs=(P(mdl, head_fsdp), P(mdl), P(mdl), P(mdl), P(), P()),
             out_specs=(P(mdl), P(mdl), P(mdl)),
@@ -170,8 +230,9 @@ def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
             labels = lax.all_gather(labels, mdl, axis=0, tiled=True)
         n_valid = jnp.clip(cfg.vocab_size - my * v_l, 0, v_l)
         if carries_stats:
-            state_local = {"stats": blocks.BlockStats(z, cnt, wq, n_valid),
-                           "proj": proj_l}
+            state_local = {
+                "stats": _stats_from_arrays(sampler, z, cnt, wq, n_valid),
+                "proj": proj_l}
         else:
             state_local, _ = _local_stats(
                 sampler, cfg, lax.stop_gradient(head_full), None, None, None,
@@ -199,7 +260,7 @@ def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
             proj_l = proj if cfg.sampler_proj_rank else None
             if carries_stats:
                 state_local = {
-                    "stats": blocks.BlockStats(z, cnt, wq, n_valid),
+                    "stats": _stats_from_arrays(sampler, z, cnt, wq, n_valid),
                     "proj": proj_l}
             else:
                 state_local, _ = _local_stats(
@@ -216,7 +277,7 @@ def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
             z = cnt = wq = jnp.zeros((), jnp.float32)
         if proj is None:
             proj = jnp.zeros((), jnp.float32)  # unused placeholder
-        return jax.shard_map(
+        return shard_map(
             head_island, mesh=mesh, check_vma=False,
             in_specs=(P(mdl, head_fsdp), P(dataspec, None), P(dataspec),
                       stat_in, stat_in, stat_in, P(), P()),
@@ -308,17 +369,16 @@ def init_train_state(key, cfg: ArchConfig, ctx: ShardCtx,
         proj = blocks.make_projection(jax.random.fold_in(key, 7),
                                       head.shape[1], cfg.sampler_proj_rank)
     z = cnt = wq = None
-    if isinstance(sampler, BlockSampler):
+    if isinstance(sampler, (BlockSampler, TreeSampler)):
         if ctx.mesh is None:
-            stats = blocks.build(head, cfg.sampler_block, proj,
-                                 cfg.vocab_size)
-            z, cnt, wq = stats.z, stats.cnt, stats.wq
+            z, cnt, wq = _build_stat_arrays(
+                sampler, cfg, head,
+                jnp.asarray(cfg.vocab_size, jnp.int32), proj)
         else:
-            v_l, n_blocks_l, r = _sampler_dims(cfg, tp=ctx.tp)
-            bs = cfg.sampler_block
-            z = jnp.zeros((ctx.tp * n_blocks_l, r, r), jnp.float32)
-            cnt = jnp.zeros((ctx.tp * n_blocks_l,), jnp.float32)
-            wq = jnp.zeros((ctx.tp * n_blocks_l, bs, r), jnp.float32)
+            (sz, sc, sw) = _stat_shapes(cfg, sampler, ctx.tp)
+            z = jnp.zeros(sz, jnp.float32)
+            cnt = jnp.zeros(sc, jnp.float32)
+            wq = jnp.zeros(sw, jnp.float32)
     return TrainState(params=params, opt_state=opt_state, sampler_z=z,
                       sampler_cnt=cnt, sampler_wq=wq, proj=proj,
                       step=jnp.zeros((), jnp.int32))
@@ -351,16 +411,12 @@ def abstract_train_state(cfg: ArchConfig, ctx: ShardCtx,
 
     d_h = api.hidden_width(cfg)
     z = cnt = wq = None
-    if isinstance(sampler, BlockSampler):
-        v_l, n_blocks_l, r = _sampler_dims(cfg, ctx.tp)
-        bs = cfg.sampler_block
+    if isinstance(sampler, (BlockSampler, TreeSampler)):
+        (sz, sc, sw) = _stat_shapes(cfg, sampler, ctx.tp)
         mspec = _spec_to_sharding(ctx, P(ctx.model_axis))
-        z = jax.ShapeDtypeStruct((ctx.tp * n_blocks_l, r, r), jnp.float32,
-                                 sharding=mspec)
-        cnt = jax.ShapeDtypeStruct((ctx.tp * n_blocks_l,), jnp.float32,
-                                   sharding=mspec)
-        wq = jax.ShapeDtypeStruct((ctx.tp * n_blocks_l, bs, r), jnp.float32,
-                                  sharding=mspec)
+        z = jax.ShapeDtypeStruct(sz, jnp.float32, sharding=mspec)
+        cnt = jax.ShapeDtypeStruct(sc, jnp.float32, sharding=mspec)
+        wq = jax.ShapeDtypeStruct(sw, jnp.float32, sharding=mspec)
     proj = None
     if cfg.sampler_proj_rank:
         proj = jax.ShapeDtypeStruct((cfg.sampler_proj_rank, d_h),

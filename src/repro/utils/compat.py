@@ -1,0 +1,19 @@
+"""Version shims for the supported JAX range.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` (keyword
+``check_rep``) to ``jax.shard_map`` (keyword ``check_vma``); this wrapper
+presents the modern signature on both.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax < 0.6: experimental location, check_rep spelling
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                  check_vma=True, **kwargs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma, **kwargs)

@@ -1,0 +1,80 @@
+"""Hypothesis shim: degrade gracefully when ``hypothesis`` is absent.
+
+Property tests import ``given``/``settings``/``st`` from here instead of
+from ``hypothesis`` directly.  When hypothesis is installed (the dev extra in
+pyproject.toml) the real library is used unchanged; otherwise a minimal
+stand-in runs each test on a small set of FIXED examples (strategy bounds +
+midpoints) so that collection never errors and the invariants still get
+exercised deterministically.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import inspect
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A fixed, deterministic set of example values."""
+
+        def __init__(self, examples):
+            self.examples = list(examples)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            mid = (min_value + max_value) // 2
+            return _Strategy([min_value, mid, max_value])
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            mid = 0.5 * (min_value + max_value)
+            return _Strategy([min_value, mid, max_value])
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy([False, True, False])
+
+    st = _Strategies()
+
+    def settings(**_kwargs):
+        """No-op replacement for hypothesis.settings."""
+
+        def deco(f):
+            return f
+
+        return deco
+
+    def given(*strategies: _Strategy):
+        """Run the test once per aligned example tuple (bounds + midpoint).
+
+        Strategies fill the RIGHTMOST positional parameters, mirroring
+        hypothesis; the exposed signature drops them so pytest does not
+        mistake the generated arguments for fixtures.
+        """
+
+        def deco(f):
+            sig = inspect.signature(f)
+            params = list(sig.parameters.values())
+            keep = params[: len(params) - len(strategies)]
+            filled = params[len(params) - len(strategies):]
+            combos = list(zip(*(s.examples for s in strategies)))
+
+            def wrapper(*args, **kwargs):
+                for combo in combos:
+                    call_kwargs = dict(kwargs)
+                    call_kwargs.update(
+                        {p.name: v for p, v in zip(filled, combo)})
+                    f(*args, **call_kwargs)
+
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            wrapper.__signature__ = sig.replace(parameters=keep)
+            return wrapper
+
+        return deco

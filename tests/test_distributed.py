@@ -50,6 +50,14 @@ def test_mesh_vs_local_loss_agreement():
 
 
 @pytest.mark.slow
+def test_tree_sampler_sharded_train():
+    """TreeSampler through the distributed train step: heap-carried tree
+    statistics sharded P('model'), level-synchronous descent in the island."""
+    out = _run("check_tree_train.py")
+    assert "TREE TRAIN CHECKS PASSED" in out
+
+
+@pytest.mark.slow
 def test_pure_fsdp_mode():
     """pure_fsdp: batch over the whole mesh, vocab-parallel head island,
     batch-spill onto the sequence dim for small batches."""

@@ -1,0 +1,148 @@
+"""Shared hierarchy core + level-synchronous batched descent (DESIGN.md
+§2.6): distribution equality, batched==sequential under a fixed key, heap
+round-trip, and update consistency across the refactor."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import blocks, hierarchy, tree
+from repro.core.kernel_fns import quadratic_kernel
+
+K = quadratic_kernel(100.0)
+
+
+def _ref_logq(w, h):
+    s = K.pair_scores(h, w)
+    return jnp.log(s) - jnp.log(s.sum())
+
+
+def test_batched_descent_matches_all_class_logq():
+    """Empirical frequencies of the batched descent converge to the exact
+    tree distribution (which equals the kernel distribution)."""
+    n, d = 64, 8
+    w = jax.random.normal(jax.random.PRNGKey(0), (n, d)) * 0.5
+    hs = jax.random.normal(jax.random.PRNGKey(1), (4, d))
+    stats = tree.build(w, K, leaf_size=4)
+    ids, logq = tree.sample_batch(stats, K, hs, 10000, jax.random.PRNGKey(2))
+    assert ids.shape == (4, 10000) and logq.shape == (4, 10000)
+    for t in range(hs.shape[0]):
+        ref = np.asarray(jnp.exp(tree.all_class_logq(stats, K, hs[t])))
+        emp = np.bincount(np.asarray(ids[t]), minlength=n) / 10000
+        assert 0.5 * np.abs(emp - ref).sum() < 0.05  # TV distance
+        # exact log-q contract (eq. 2): reported logq IS the tree's logq
+        all_lq = np.asarray(tree.all_class_logq(stats, K, hs[t]))
+        np.testing.assert_allclose(np.asarray(logq[t]),
+                                   all_lq[np.asarray(ids[t])],
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,leaf,m", [(300, 8, 64), (64, 4, 17), (1000, 16, 8)])
+def test_batched_equals_sequential_fixed_key(n, leaf, m):
+    """The level-synchronous descent consumes the SAME key tree as the
+    sequential per-draw descent — identical draws, identical log-q."""
+    d = 10
+    w = jax.random.normal(jax.random.PRNGKey(n), (n, d)) * 0.4
+    hs = jax.random.normal(jax.random.PRNGKey(1), (3, d))
+    stats = tree.build(w, K, leaf_size=leaf)
+    key = jax.random.PRNGKey(7)
+    # dense_cap=0 forces the gathered form: arithmetic-identical to the
+    # sequential reference, so draws must match bit-for-bit.
+    ids_b, logq_b = tree.sample_batch(stats, K, hs, m, key,
+                                      use_kernels=False, dense_cap=0)
+    keys = jax.random.split(key, hs.shape[0])
+    ids_s, logq_s = jax.vmap(
+        lambda hh, kk: tree.sample_sequential(stats, K, hh, m, kk))(hs, keys)
+    np.testing.assert_array_equal(np.asarray(ids_b), np.asarray(ids_s))
+    np.testing.assert_allclose(np.asarray(logq_b), np.asarray(logq_s),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_pallas_routed_descent_matches_plain():
+    """Routing dense levels / the leaf step through the Pallas kernels
+    (interpret mode off-TPU) must not change the draws."""
+    n, d, m = 500, 12, 64
+    w = jax.random.normal(jax.random.PRNGKey(3), (n, d)) * 0.4
+    hs = jax.random.normal(jax.random.PRNGKey(4), (5, d))
+    stats = tree.build(w, K, leaf_size=8)
+    key = jax.random.PRNGKey(11)
+    ids_k, logq_k = tree.sample_batch(stats, K, hs, m, key, use_kernels=True)
+    ids_p, logq_p = tree.sample_batch(stats, K, hs, m, key, use_kernels=False)
+    np.testing.assert_array_equal(np.asarray(ids_k), np.asarray(ids_p))
+    np.testing.assert_allclose(np.asarray(logq_k), np.asarray(logq_p),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_heap_round_trip():
+    """to_heap/from_heap preserve every level (the TrainState carriage)."""
+    n, d = 200, 8
+    w = jax.random.normal(jax.random.PRNGKey(5), (n, d))
+    stats = tree.build(w, K, leaf_size=8)
+    z_heap, cnt_heap = hierarchy.to_heap(stats)
+    assert z_heap.shape[0] == hierarchy.heap_rows(stats.num_leaves)
+    back = hierarchy.from_heap(z_heap, cnt_heap, stats.wq, stats.n_valid,
+                               stats.n)
+    assert back.depth == stats.depth
+    for a, b in zip(back.levels_z, stats.levels_z):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(back.levels_cnt, stats.levels_cnt):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # Sampling through the round-tripped stats is unchanged.
+    h = jax.random.normal(jax.random.PRNGKey(6), (d,))
+    ids_a, logq_a = tree.sample(stats, K, h, 100, jax.random.PRNGKey(7))
+    ids_b, logq_b = tree.sample(back, K, h, 100, jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
+
+
+def test_update_rows_shared_core_tree_and_blocks():
+    """hierarchy.update_rows drives BOTH samplers: tree path update and block
+    scatter agree with full rebuilds after the refactor."""
+    n, d = 256, 8
+    w = jax.random.normal(jax.random.PRNGKey(8), (n, d))
+    ids = jnp.array([0, 17, 130, 255, 64])
+    w_new = jax.random.normal(jax.random.PRNGKey(9), (5, d))
+
+    tstats = tree.build(w, K, leaf_size=8)
+    upd = tree.update_path(tstats, K, ids, w_new)
+    rebuilt = tree.build(w.at[ids].set(w_new), K, leaf_size=8)
+    for a, b in zip(upd.levels_z, rebuilt.levels_z):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(upd.wq), np.asarray(rebuilt.wq),
+                               rtol=1e-6, atol=1e-6)
+
+    bstats = blocks.build(w, 32)
+    bupd = blocks.update_rows(bstats, ids, w_new)
+    brebuilt = blocks.build(w.at[ids].set(w_new), 32)
+    np.testing.assert_allclose(np.asarray(bupd.z), np.asarray(brebuilt.z),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_runtime_n_valid_masks_tree_padding():
+    """Rows at/after a runtime n_valid carry exactly zero tree probability —
+    the invariant the vocab-sharded head island relies on."""
+    w = jax.random.normal(jax.random.PRNGKey(10), (64, 8))
+    stats = tree.build(w, K, leaf_size=4, n_valid=50)
+    h = jax.random.normal(jax.random.PRNGKey(11), (8,))
+    logq = tree.all_class_logq(stats, K, h)
+    assert np.all(np.asarray(logq[50:]) == -np.inf)
+    np.testing.assert_allclose(np.exp(np.asarray(logq[:50])).sum(), 1.0,
+                               rtol=1e-5)
+    ids, _ = tree.sample(stats, K, h, 2000, jax.random.PRNGKey(12))
+    assert (np.asarray(ids) < 50).all()
+
+
+def test_projected_batched_descent_self_consistent():
+    """Projected-space batched descent: logq matches its own oracle."""
+    n, d, r = 300, 32, 8
+    w = jax.random.normal(jax.random.PRNGKey(13), (n, d)) * 0.3
+    hs = jax.random.normal(jax.random.PRNGKey(14), (3, d))
+    proj = blocks.make_projection(jax.random.PRNGKey(15), d, r)
+    stats = tree.build(w, K, leaf_size=8, proj=proj)
+    ids, logq = tree.sample_batch(stats, K, hs, 200, jax.random.PRNGKey(16),
+                                  proj=proj)
+    for t in range(hs.shape[0]):
+        all_lq = np.asarray(tree.all_class_logq(stats, K, hs[t], proj=proj))
+        np.testing.assert_allclose(np.asarray(logq[t]),
+                                   all_lq[np.asarray(ids[t])],
+                                   rtol=1e-4, atol=1e-4)

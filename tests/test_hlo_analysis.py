@@ -20,8 +20,10 @@ def test_scan_trip_count_correction():
     expected = 7 * 2 * (2 * 32 * 64 * 64)  # 7 iterations x 2 matmuls
     assert abs(res["flops"] - expected) / expected < 0.02
     # raw XLA undercounts by ~the trip count
-    raw = compiled.cost_analysis()["flops"]
-    assert res["flops"] > 5 * raw
+    raw = compiled.cost_analysis()
+    if isinstance(raw, list):  # older jax: one dict per device
+        raw = raw[0]
+    assert res["flops"] > 5 * raw["flops"]
 
 
 def test_nested_scan():

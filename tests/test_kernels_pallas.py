@@ -38,6 +38,19 @@ def test_block_scores(t, n, r, dtype):
 
 
 @pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("g,b,r", [(16, 8, 16), (100, 4, 8), (128, 32, 32),
+                                   (1, 16, 8)])
+def test_leaf_scores(g, b, r, dtype):
+    h = (jax.random.normal(jax.random.PRNGKey(g), (g, r)) * 0.5).astype(dtype)
+    rows = (jax.random.normal(jax.random.PRNGKey(b), (g, b, r)) * 0.5
+            ).astype(dtype)
+    got = ops.leaf_scores(h, rows, alpha=100.0)
+    want = ref.leaf_scores_ref(h, rows, 100.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 3e-4)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("t,d,m", [(32, 16, 64), (37, 48, 70), (128, 8, 8),
                                    (5, 32, 200)])
 def test_sampled_loss(t, d, m, dtype):

@@ -68,12 +68,15 @@ def test_abs_softmax_mode():
 
 
 def test_gradient_estimator_eq5_softmax_unbiased():
-    """Monte-Carlo check of Theorem 2.1: with q = softmax the expected
-    sampled gradient (eq. 5) equals p - y (eq. 4)."""
+    """Monte-Carlo check of Theorem 2.1: with q = softmax over the NEGATIVE
+    classes the expected sampled gradient (eq. 5) equals p - y (eq. 4) for
+    any m.  (Sampling the positive as a negative would double-count it in
+    the partition estimate — the theorem's q excludes the positive.)"""
     n, m, reps = 12, 4, 20000
     o = jax.random.normal(jax.random.PRNGKey(6), (n,))
     labels = jnp.asarray(3)
-    logq = jax.nn.log_softmax(o)
+    neg_logits = jnp.where(jnp.arange(n) == labels, -jnp.inf, o)
+    logq = jax.nn.log_softmax(neg_logits)
     full = full_softmax_grad_wrt_logits(o[None], labels[None])[0]
 
     def one(key):
