@@ -26,9 +26,11 @@ def csv_row(name: str, us: float, derived: str = "") -> str:
 
 def train_small(cfg, sampler_name: str, m: int, steps: int, seed: int = 0,
                 lr: float = 1e-2, global_batch: int = 64,
-                eval_every: int = 0):
+                eval_every: int = 0, return_state: bool = False):
     """Train a reduced model with a given sampler; return (final full-softmax
-    eval loss, loss curve).  The workhorse of the Fig. 2/3/4 replications."""
+    eval loss, loss curve).  The workhorse of the Fig. 2/3/4 replications.
+    ``return_state=True`` appends the final TrainState (for serving demos
+    that need the trained head, e.g. examples/recsys_youtube.py)."""
     import dataclasses
 
     from repro.core.sampled_softmax import full_softmax_loss
@@ -69,4 +71,6 @@ def train_small(cfg, sampler_name: str, m: int, steps: int, seed: int = 0,
         if eval_every and i % eval_every == 0:
             curve.append((i, float(eval_loss(state.params, eval_batch))))
     final = float(eval_loss(state.params, eval_batch))
+    if return_state:
+        return final, curve, state
     return final, curve

@@ -1,0 +1,96 @@
+"""Serving decode cost: dense O(n d) head vs hierarchy beam (DESIGN.md §5).
+
+Compares, at growing class counts n:
+  * the dense top-k head (one (T, n) matmul + top-k — the old serving path)
+  * hierarchy-backed beam retrieval at several beam widths, reporting wall
+    time, the WORK each path does (classes exactly scored + an analytic
+    flops-per-query estimate), and the measured recall@k of the beam knob.
+
+Embeddings are drawn from a clustered mixture (what trained heads look
+like; see test_retrieval.py for recall on an actually-trained model) so the
+recall column is representative.  On CPU the dense matmul is heavily
+optimized while gathers are not — the flops column is the
+hardware-independent story, wall time the honest local one.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, time_fn
+from repro.serve import retrieval
+
+
+def clustered_table(key, n: int, d: int, n_clusters: int = 32,
+                    spread: float = 0.15):
+    """Mixture-of-Gaussians class embeddings (a trained head's geometry)."""
+    kc, ka, kn = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (n_clusters, d))
+    assign = jax.random.randint(ka, (n,), 0, n_clusters)
+    return centers[assign] + spread * jax.random.normal(kn, (n, d))
+
+
+def beam_flops_per_query(index: retrieval.RetrievalIndex, beam: int,
+                         d: int, s: int = 4) -> int:
+    """Mirror of beam_descent's default cost policy: spectral + ball + norm
+    bounds ((s + 2) * r per node; dense-table levels evaluate every node,
+    gathered levels only the 2*beam candidates) + exact leaf dots."""
+    num_leaves = index.num_leaves_shard
+    depth = max(1, num_leaves.bit_length() - 1)
+    dense_cap = max(64, 2 * beam)
+    bound = 0
+    for lvl in range(1, depth + 1):
+        nodes = 1 << lvl
+        evaluated = nodes if nodes <= dense_cap else min(2 * beam, nodes)
+        bound += evaluated * (s + 2) * d
+    exact = min(beam, num_leaves) * index.leaf_size * d
+    return bound + exact
+
+
+def run(ns=(4096, 16384), d=64, k=10, t_batch=64, leaf=16, quiet=False):
+    rows = []
+    for n in ns:
+        w = clustered_table(jax.random.PRNGKey(0), n, d)
+        hs = jax.random.normal(jax.random.PRNGKey(1), (t_batch, d))
+
+        f_dense = jax.jit(lambda h: retrieval.dense_topk(w, h, k))
+        us = time_fn(f_dense, hs)
+        rows.append(csv_row(
+            f"decode/dense-head/n={n}", us,
+            f"scored={n}/{n} flops/q={n * d} recall@{k}=1.000"))
+
+        index = retrieval.build_index(w, leaf_size=leaf)
+        for beam in (8, 16, 32, 64):
+            if beam * index.leaf_size < k:
+                continue
+            f_beam = jax.jit(
+                lambda h, b=beam: retrieval.decode_topk(index, h, k, b))
+            us = time_fn(f_beam, hs)
+            rec = retrieval.recall_at_k(index, w, hs, k, beam)
+            scored = retrieval.scored_classes(index, beam)
+            fl = beam_flops_per_query(index, beam, d)
+            rows.append(csv_row(
+                f"decode/beam-{beam}/n={n}", us,
+                f"scored={scored}/{n} flops/q={fl} "
+                f"work-vs-dense={fl / (n * d):.3f}x recall@{k}={rec:.3f}"))
+
+    if not quiet:
+        for r in rows:
+            print(r, flush=True)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.full:
+        run(ns=(4096, 16384, 65536))
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,11 @@ def main() -> None:
     from benchmarks import sampler_cost
     sampler_cost.run(ns=(4096, 16384))
 
+    print("\n# decode_topk (serving MIPS, DESIGN.md §5) — "
+          "name,us_per_call,derived")
+    from benchmarks import decode_topk
+    decode_topk.run(ns=(4096,))
+
     print("\n# kernel_bench — name,us_per_call,derived")
     from benchmarks import kernel_bench
     kernel_bench.run()

@@ -1,7 +1,13 @@
 """Batched serving demo (deliverable b): prefill a prompt batch, then decode
 greedily with the KV-cache engine — the path the decode_* dry-run cells lower.
 
+With --topk K the demo also decodes through the hierarchy-backed MIPS index
+(DESIGN.md §5): the head is packed into a RetrievalIndex once, each step
+returns the top-K next-token candidates + logits via beam retrieval, and the
+greedy token (top-1 at full beam) is checked against the dense path.
+
 Run:  PYTHONPATH=src python examples/serve_decode.py --tokens 16
+      PYTHONPATH=src python examples/serve_decode.py --tokens 8 --topk 5
 """
 import argparse
 import time
@@ -11,7 +17,12 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import api
-from repro.serve.engine import make_decode_step, make_prefill_step
+from repro.serve import retrieval
+from repro.serve.engine import (
+    make_decode_step,
+    make_prefill_step,
+    make_topk_step,
+)
 from repro.sharding.rules import local_ctx
 
 
@@ -21,6 +32,11 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--topk", type=int, default=0,
+                    help="also decode top-K candidates through the "
+                         "retrieval index (0 = dense greedy only)")
+    ap.add_argument("--beam", type=int, default=0,
+                    help="beam width for --topk (0 = full beam, exact)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -50,6 +66,34 @@ def main():
           f"({args.batch*args.tokens/dt:.1f} tok/s incl. compile)")
     for i, row in enumerate(out.tolist()):
         print(f"  seq{i}: {row}")
+
+    if not args.topk:
+        return
+
+    # --- index-backed top-k decode (DESIGN.md §5) --------------------------
+    head = api.head_table(params, cfg)
+    index = retrieval.build_index(head, leaf_size=16,
+                                  vocab_size=cfg.vocab_size)
+    beam = args.beam or None
+    topk_step = jax.jit(make_topk_step(cfg, ctx, args.topk, index=index,
+                                       beam=beam))
+    nxt, cache = prefill(params, {"tokens": prompts})
+    pos = jnp.full((args.batch,), args.prompt_len, jnp.int32)
+    ids, logits, cache = topk_step(params, nxt[:, None], cache, pos)
+    scored = retrieval.scored_classes(index, beam)
+    print(f"\ntop-{args.topk} via index "
+          f"(beam={'full' if beam is None else beam}, "
+          f"scored {scored}/{cfg.vocab_size} classes):")
+    for i in range(args.batch):
+        pairs = ", ".join(f"{t}:{l:.2f}"
+                          for t, l in zip(ids[i].tolist(),
+                                          logits[i].tolist()))
+        print(f"  seq{i}: {pairs}")
+    if beam is None:
+        # full beam is exact: top-1 must equal the dense greedy token
+        nxt_ref, _ = decode(params, nxt[:, None], cache, pos)
+        assert (ids[:, 0] == nxt_ref).all(), "index top-1 != dense greedy"
+        print("  (top-1 matches the dense greedy path)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,41 @@
+"""CI docs gate: execute every fenced ```python block in README.md.
+
+Documented commands rot silently; this keeps the README quickstart honest
+by running each python code block in order inside one shared namespace
+(blocks may build on earlier ones).  Run from the repo root:
+
+    PYTHONPATH=src python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def python_blocks(md: str) -> list[str]:
+    return re.findall(r"```python\n(.*?)```", md, flags=re.DOTALL)
+
+
+def main() -> int:
+    readme = (ROOT / "README.md").read_text()
+    blocks = python_blocks(readme)
+    if not blocks:
+        print("FAIL: no ```python blocks found in README.md")
+        return 1
+    ns: dict = {"__name__": "__readme__"}
+    for i, block in enumerate(blocks, 1):
+        t0 = time.time()
+        print(f"-- README block {i}/{len(blocks)} "
+              f"({len(block.splitlines())} lines) --", flush=True)
+        exec(compile(block, f"README.md[block {i}]", "exec"), ns)  # noqa: S102
+        print(f"   ok ({time.time() - t0:.1f}s)", flush=True)
+    print(f"DOCS OK: {len(blocks)} block(s) ran")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -66,8 +66,9 @@ class BlockStats:
 
     def as_hierarchy(self) -> hierarchy.HierarchyStats:
         """The shared-core view: a depth-0 hierarchy (leaf level only)."""
-        return hierarchy.HierarchyStats((self.z,), (self.cnt,), self.wq,
-                                        self.n_valid, self.n_pad)
+        return hierarchy.HierarchyStats((self.z,), (self.cnt,),
+                                        (hierarchy.leaf_ub(self.wq),),
+                                        self.wq, self.n_valid, self.n_pad)
 
 
 def _from_hierarchy(hs: hierarchy.HierarchyStats) -> BlockStats:

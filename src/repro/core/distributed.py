@@ -153,6 +153,32 @@ def sharded_logits_argmax(w_local: Array, h: Array, *, axis_name: str,
     return winner_id, best
 
 
+def sharded_logits_topk(w_local: Array, h: Array, k: int, *,
+                        axis_name: str,
+                        bias_local: Array | None = None
+                        ) -> tuple[Array, Array]:
+    """Dense top-k decode over a sharded head: global (ids, logits), sorted.
+
+    The O(n d) fallback when no retrieval index is present (DESIGN.md §5).
+    w_local: (n/tp, d) local head shard; h: (T, d) replicated across the TP
+    axis -> ids (T, k) int32 GLOBAL class ids, logits (T, k) fp32.
+    Communication: one all-gather of (T, k) per-shard candidates — never a
+    gathered (T, n) logit tensor.  Ties resolve toward the lowest shard
+    (matching ``sharded_logits_argmax`` at k = 1)."""
+    logits = jnp.einsum("td,nd->tn", h.astype(jnp.float32),
+                        w_local.astype(jnp.float32))
+    if bias_local is not None:
+        logits = logits + bias_local[None, :]
+    n_local = w_local.shape[0]
+    off = local_vocab_offset(n_local, axis_name)
+    local_best, local_arg = lax.top_k(logits, min(k, n_local))
+    local_ids = local_arg.astype(jnp.int32) + off
+    all_best = lax.all_gather(local_best, axis_name, axis=1, tiled=True)
+    all_ids = lax.all_gather(local_ids, axis_name, axis=1, tiled=True)
+    best, sel = lax.top_k(all_best, k)
+    return jnp.take_along_axis(all_ids, sel, axis=1), best
+
+
 def sharded_partition_diagnostics(state_local: Any, sampler: Sampler,
                                   h: Array, *, axis_name: str) -> Array:
     """Per-shard share of the global kernel mass (load-balance telemetry).

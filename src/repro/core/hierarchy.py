@@ -29,6 +29,18 @@ This module owns everything the two previously duplicated:
                        ``TrainState`` and sharded ``P('model')`` exactly like
                        block statistics (DESIGN.md §2.5).
 
+Alongside the Gram sums every level also carries a MAX-UPPER-BOUND statistic
+(``levels_ub``): the largest squared row norm of any class in the node.
+Together with the Gram sum it bounds the best logit inside a subtree,
+
+    max_{j in C} <h, w_j>  <=  min( sqrt(h^T Z_C h), ||h|| * sqrt(ub(C)) )
+
+which is what the serving-side beam retrieval prunes with
+(``serve/retrieval.py``, DESIGN.md §5).  The statistic is built, refreshed,
+and sparsely updated on exactly the same cadence as the Gram sums; it is a
+pure function of ``wq`` so the heap carriage stays two arrays and
+``from_heap`` rebuilds it in O(n r).
+
 The reported log-q is always the EXACT log-probability of the draw under the
 hierarchy's distribution (the telescoping product of eq. 9 times the
 within-leaf conditional), which is what the eq. 2 correction requires.
@@ -51,11 +63,23 @@ Array = jax.Array
 class HierarchyStats:
     """Per-level Gram statistics + the (possibly projected) sampling table.
 
-    levels_z:   tuple over levels root..leaf of (nodes_l, r, r) Gram sums;
+    When carried in ``TrainState`` or a serving index, the heap-packed form
+    of this object is sharded ``P('model')`` over the leading (node / leaf)
+    axis: the top log2(tp) tree levels ARE the TP shard index and every
+    shard owns the subtree over its local vocab rows (DESIGN.md §2.5).
+
+    levels_z:   tuple over levels root..leaf of (nodes_l, r, r) fp32 Gram
+                sums ``Z_C = sum_{j in C} w_j w_j^T`` (paper eq. 8's summary
+                statistic z(C), realized as a matrix — DESIGN.md §2.1);
                 level l of a full binary tree holds 2^l nodes, and the
                 two-level form holds only the leaf level.
-    levels_cnt: tuple over levels of (nodes_l,) true (non-padding) counts.
-    wq:         (num_leaves, leaf_size, r) sampling copy of the class
+    levels_cnt: tuple over levels of (nodes_l,) fp32 true (non-padding)
+                counts |C| — the constant part of the quadratic-kernel mass.
+    levels_ub:  tuple over levels of (nodes_l,) fp32 max squared row norms
+                ``ub(C) = max_{j in C} ||w_j||^2`` (padding rows are zero and
+                never attain the max of a non-empty node).  Serving-side
+                retrieval prunes with it (DESIGN.md §5); sampling ignores it.
+    wq:         (num_leaves, leaf_size, r) fp32 sampling copy of the class
                 embeddings (projected if proj is not None; zero rows for
                 padding and for rows at/after ``n_valid``).  Leaf scoring and
                 therefore the reported log-q are exact w.r.t. this copy.
@@ -68,6 +92,7 @@ class HierarchyStats:
 
     levels_z: tuple[Array, ...]
     levels_cnt: tuple[Array, ...]
+    levels_ub: tuple[Array, ...]
     wq: Array
     n_valid: Array
     n: int = dataclasses.field(metadata=dict(static=True))
@@ -98,11 +123,36 @@ def project(w: Array, proj: Array | None) -> Array:
 
 
 def leaf_counts(n_valid: Array, num_leaves: int, leaf_size: int) -> Array:
-    """True (non-padding) class count of each leaf block."""
+    """True (non-padding) class count of each leaf block.
+
+    n_valid: scalar int32 (may be traced) -> (num_leaves,) fp32 counts.
+    """
     return jnp.clip(
         n_valid.astype(jnp.float32)
         - jnp.arange(num_leaves, dtype=jnp.float32) * leaf_size,
         0.0, float(leaf_size))
+
+
+def leaf_ub(wq: Array) -> Array:
+    """Max squared row norm of each leaf block: wq (L, B, r) -> (L,) fp32.
+
+    Padding / masked rows are exactly zero in ``wq`` so they contribute 0 —
+    harmless, since an all-padding node also has zero Gram mass and is
+    excluded from retrieval by its zero count."""
+    return jnp.max(jnp.sum(wq * wq, axis=-1), axis=-1)
+
+
+def ub_levels_from_wq(wq: Array, depth: int) -> tuple[Array, ...]:
+    """Rebuild the per-level max-norm statistic bottom-up from ``wq``.
+
+    O(n r + num_leaves): cheap enough that the heap carriage does not store
+    it — ``from_heap`` calls this so carried/restored statistics always have
+    the bound on the same refresh cadence as the Gram sums."""
+    levels = [leaf_ub(wq)]
+    for _ in range(depth):
+        child = levels[0]
+        levels.insert(0, jnp.maximum(child[0::2], child[1::2]))
+    return tuple(levels)
 
 
 def build(w: Array, leaf_size: int, *, proj: Array | None = None,
@@ -110,13 +160,16 @@ def build(w: Array, leaf_size: int, *, proj: Array | None = None,
           full_tree: bool = True) -> HierarchyStats:
     """Build the hierarchy bottom-up: leaf Gram blocks, then pairwise sums.
 
-    w: (n, d) class embeddings.  Cost: one batched matmul for the leaves +
-    O(num_leaves * r^2) for the upper levels.  ``full_tree=True`` rounds the
+    w: (n, d) class embeddings (one vocab shard's rows when called inside
+    the P('model') island).  Cost: one batched matmul for the leaves +
+    O(num_leaves * r^2) for the upper levels; the max-norm bound rides along
+    in O(n r).  ``full_tree=True`` rounds the
     leaf count to a power of two and builds every binary level up to the
     root; ``full_tree=False`` keeps only the leaf level (the two-level TPU
     form, whose "root" is a softmax over all leaf blocks).
     ``n_valid``: number of real classes (rows beyond it must carry no mass);
     may be a traced scalar for sharded tables with padding rows.
+    Returns a ``HierarchyStats`` whose level tuples are ordered root..leaf.
     """
     n_rows, _ = w.shape
     if n_valid is None:
@@ -141,14 +194,17 @@ def build(w: Array, leaf_size: int, *, proj: Array | None = None,
 
     levels_z = [z]
     levels_cnt = [cnt]
+    levels_ub = [leaf_ub(wq)]
     if full_tree:
         while levels_z[0].shape[0] > 1:
             child_z = levels_z[0]
             child_c = levels_cnt[0]
+            child_u = levels_ub[0]
             levels_z.insert(0, child_z[0::2] + child_z[1::2])
             levels_cnt.insert(0, child_c[0::2] + child_c[1::2])
-    return HierarchyStats(tuple(levels_z), tuple(levels_cnt), wq, n_valid,
-                          n_rows)
+            levels_ub.insert(0, jnp.maximum(child_u[0::2], child_u[1::2]))
+    return HierarchyStats(tuple(levels_z), tuple(levels_cnt),
+                          tuple(levels_ub), wq, n_valid, n_rows)
 
 
 def update_rows(stats: HierarchyStats, ids: Array, w_new: Array,
@@ -156,7 +212,10 @@ def update_rows(stats: HierarchyStats, ids: Array, w_new: Array,
     """Paper Fig. 1b: after embeddings of ``ids`` change to ``w_new``, update
     the statistics along each leaf->root path with Delta(w w^T).
 
-    ids: (k,) class indices; w_new: (k, d).  Cost O(k * depth * r^2).
+    ids: (k,) LOCAL class indices (shard-local when the table is a vocab
+    shard); w_new: (k, d).  Cost O(k * depth * r^2) for the Gram sums plus
+    O(k * depth) for the max-norm bound (touched leaves recompute their max
+    from ``wq``, then the max propagates up the same leaf->root paths).
     Duplicate ids are NOT allowed (undefined order of old-row reads).
     """
     wq_new = project(w_new, proj)
@@ -172,8 +231,17 @@ def update_rows(stats: HierarchyStats, ids: Array, w_new: Array,
     for lvl in range(depth + 1):
         node_of = leaf_of >> (depth - lvl)
         new_z.append(stats.levels_z[lvl].at[node_of].add(delta))
-    return HierarchyStats(tuple(new_z), stats.levels_cnt, wq, stats.n_valid,
-                          stats.n)
+    # Max-norm bound: a max cannot be sparsely decremented, so touched
+    # leaves recompute from wq, then parents take max-of-children bottom-up.
+    new_ub = list(stats.levels_ub)
+    new_ub[depth] = new_ub[depth].at[leaf_of].set(leaf_ub(wq[leaf_of]))
+    for lvl in range(depth - 1, -1, -1):
+        node_of = leaf_of >> (depth - lvl)
+        child = new_ub[lvl + 1]
+        new_ub[lvl] = new_ub[lvl].at[node_of].set(
+            jnp.maximum(child[2 * node_of], child[2 * node_of + 1]))
+    return HierarchyStats(tuple(new_z), stats.levels_cnt, tuple(new_ub), wq,
+                          stats.n_valid, stats.n)
 
 
 # --- flat heap packing (TrainState carriage; DESIGN.md §2.5) -----------------
@@ -184,37 +252,57 @@ def heap_rows(num_leaves: int) -> int:
     return 2 * num_leaves
 
 
+def pack_levels(levels) -> Array:
+    """Heap-pack a root..leaf tuple of per-level arrays into one flat array.
+
+    Level l occupies rows [2^l - 1, 2^(l+1) - 1); one zero padding row
+    rounds the total to an even 2L.  This is THE heap layout contract —
+    TrainState's statistics carriage and the serving ``RetrievalIndex``
+    both speak it (any per-node statistic of any trailing shape packs the
+    same way)."""
+    pad = jnp.zeros((1, *levels[0].shape[1:]), levels[0].dtype)
+    return jnp.concatenate(list(levels) + [pad], axis=0)
+
+
+def unpack_levels(heap: Array, depth: int) -> tuple[Array, ...]:
+    """Inverse of ``pack_levels``: static slices back to root..leaf."""
+    out, off = [], 0
+    for lvl in range(depth + 1):
+        size = 1 << lvl
+        out.append(heap[off:off + size])
+        off += size
+    return tuple(out)
+
+
 def to_heap(stats: HierarchyStats) -> tuple[Array, Array]:
     """Pack levels root..leaf into flat (2L, r, r) / (2L,) arrays.
 
-    Level l occupies rows [2^l - 1, 2^(l+1) - 1); the final padding row is
-    zero.  The flat layout is what TrainState carries and shards P('model').
+    The flat ``pack_levels`` layout is what TrainState and the serving
+    ``RetrievalIndex`` carry, sharded P('model') over the leading axis.
+    The max-norm bound is intentionally not packed — ``from_heap`` rebuilds
+    it exactly from ``wq`` (see ``ub_levels_from_wq``).
     """
-    r = stats.wq.shape[-1]
-    z = jnp.concatenate(
-        list(stats.levels_z) + [jnp.zeros((1, r, r), jnp.float32)], axis=0)
-    cnt = jnp.concatenate(
-        list(stats.levels_cnt) + [jnp.zeros((1,), jnp.float32)], axis=0)
-    return z, cnt
+    return pack_levels(stats.levels_z), pack_levels(stats.levels_cnt)
 
 
 def from_heap(z_heap: Array, cnt_heap: Array, wq: Array, n_valid: Array,
               n: int | None = None) -> HierarchyStats:
-    """Inverse of ``to_heap``: static slices back into per-level tuples."""
+    """Inverse of ``to_heap``: static slices back into per-level tuples.
+
+    z_heap: (2L, r, r); cnt_heap: (2L,); wq: (L, leaf, r) — one shard's
+    slices when the carried arrays are P('model')-sharded.  The max-norm
+    bound is NOT stored in the heap; it is an O(n r) pure function of ``wq``
+    and is rebuilt here, so rehydrated statistics carry it on the same
+    cadence as the Gram sums."""
     num_leaves = wq.shape[0]
     depth = log2_int(num_leaves)
     assert z_heap.shape[0] == heap_rows(num_leaves), (
         z_heap.shape, num_leaves)
-    levels_z, levels_cnt = [], []
-    off = 0
-    for lvl in range(depth + 1):
-        size = 1 << lvl
-        levels_z.append(z_heap[off:off + size])
-        levels_cnt.append(cnt_heap[off:off + size])
-        off += size
     if n is None:
         n = num_leaves * wq.shape[1]
-    return HierarchyStats(tuple(levels_z), tuple(levels_cnt), wq,
+    return HierarchyStats(unpack_levels(z_heap, depth),
+                          unpack_levels(cnt_heap, depth),
+                          ub_levels_from_wq(wq, depth), wq,
                           jnp.asarray(n_valid, jnp.int32), n)
 
 
@@ -246,7 +334,12 @@ def leaf_logits(stats: HierarchyStats, kernel: SamplingKernel, hq: Array,
                 leaf_idx: Array, use_kernels: bool) -> Array:
     """Exact within-leaf kernel log-scores, padding masked to -inf.
 
-    hq: (T, r); leaf_idx: (T, m) -> (T, m, leaf_size).
+    The Fig. 1c leaf step: classes inside a sampled leaf are scored exactly
+    with K(h, w) = alpha <h,w>^2 + 1 (paper §3.3) through the
+    ``leaf_scores`` Pallas kernel when ``use_kernels``.
+
+    hq: (T, r) projected queries; leaf_idx: (T, m) sampled leaf indices
+    -> (T, m, leaf_size) log kernel scores.
     """
     t, m = leaf_idx.shape
     b = stats.leaf_size

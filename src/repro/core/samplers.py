@@ -12,6 +12,12 @@ pytree ``state`` so everything jits/vmaps/shards cleanly:
 sampled from — that is what eq. 2 needs, and it is what keeps stale statistics
 correct rather than approximate (DESIGN.md §2.4).
 
+Scope: sampling is TRAINING-ONLY.  The paper's technique replaces the full
+softmax in the LOSS; inference never samples (paper §5.2) — serving decodes
+through the dense sharded head or the hierarchy-backed top-k MIPS index
+(``serve/engine.py`` / ``serve/retrieval.py``, DESIGN.md §5), which reuses
+the same Gram statistics these samplers maintain.
+
 Distributions (paper §4.1.2 + Fig. 2):
   uniform            q ∝ 1
   unigram            q ∝ class frequency

@@ -20,6 +20,15 @@ identical draws.
 
 An optional fixed projection ``P: (r, d)`` moves sampling into a rank-r space
 (DESIGN.md §2.3); pass ``proj=None`` for the paper-exact sampler.
+
+Sharding: inside the vocab-parallel train island each shard builds/samples
+its own tree over its LOCAL vocab rows — the top log2(tp) levels of the
+conceptual global tree are the TP shard index (DESIGN.md §2.5); statistics
+travel heap-packed, sharded P('model').  Shapes below are per shard.
+
+Sampling here is training-only; the serving-side reuse of the same
+hierarchy for top-k MIPS decode lives in ``serve/retrieval.py``
+(DESIGN.md §5).
 """
 from __future__ import annotations
 

@@ -4,8 +4,10 @@
   block_scores  — batched quadratic forms  alpha * h^T Z_b h + cnt  (root
                   level of the two-level sampler and the dense upper levels
                   of the level-synchronous tree descent)
-  leaf_scores   — per-draw within-leaf kernel scores for gathered leaf
-                  blocks (leaf level of the batched descent, DESIGN.md §2.6)
+  leaf_scores   — per-draw within-leaf scores for gathered leaf blocks:
+                  quadratic-kernel mode (leaf level of the batched descent,
+                  DESIGN.md §2.6) and raw-dot mode (exact scoring step of
+                  serving beam retrieval, DESIGN.md §5)
   sampled_loss  — fused corrected sampled-softmax loss: logits + eq. 2
                   correction + online logsumexp, never materializing (T, m)
                   logits in HBM

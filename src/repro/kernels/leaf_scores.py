@@ -1,16 +1,25 @@
-"""Pallas kernel: per-draw within-leaf quadratic-kernel scores — the leaf
-level of the level-synchronous descent (DESIGN.md §2.6).
+"""Pallas kernel: per-draw within-leaf scores — the leaf level of both the
+level-synchronous sampling descent (DESIGN.md §2.6) and the serving-side
+beam retrieval (DESIGN.md §5).
 
-    scores[g, b] = alpha * (rows[g, b, :] . h[g, :])^2 + 1
+Two modes over the same body (one VMEM schedule, one contraction):
+
+    kernel mode:  scores[g, b] = alpha * (rows[g, b, :] . h[g, :])^2 + 1
+                  — the paper's quadratic kernel K (§3.3), used by the
+                  within-leaf categorical of the sampler.
+    dot mode:     scores[g, b] = rows[g, b, :] . h[g, :]
+                  — the raw logit <h, w>, used by ``serve/retrieval.py`` to
+                  score surviving leaves exactly for top-k MIPS decode.
 
 for G gathered leaf blocks rows: (G, B, r), one query per draw h: (G, r).
 Grid is one dimension of G tiles; each step loads a (Gt, B, r) block tile and
 its (Gt, r) query tile into VMEM.  The contraction is a batched matvec —
 elementwise multiply + lane reduction on the VPU (B*r flops per draw; the MXU
 has nothing to batch over since every draw owns a distinct leaf block).
-Padding rows inside a leaf are zero, so they score exactly alpha*0+1; the
-caller (``hierarchy.leaf_logits``) masks them to zero mass with its
-``n_valid`` grid — this kernel and its ops.py wrapper return raw scores.
+Padding rows inside a leaf are zero, so they score exactly alpha*0+1 (kernel
+mode) or 0 (dot mode); the callers (``hierarchy.leaf_logits`` /
+``retrieval.topk``) mask them out with their ``n_valid`` grids — this kernel
+and its ops.py wrappers return raw scores.
 """
 from __future__ import annotations
 
@@ -23,23 +32,27 @@ from jax.experimental import pallas as pl
 Array = jax.Array
 
 
-def _leaf_scores_kernel(alpha, h_ref, rows_ref, out_ref):
+def _leaf_scores_kernel(alpha, square, h_ref, rows_ref, out_ref):
     h = h_ref[...].astype(jnp.float32)          # (Gt, r)
     rows = rows_ref[...].astype(jnp.float32)    # (Gt, B, r)
     dots = jnp.sum(rows * h[:, None, :], axis=-1)  # (Gt, B)
-    out_ref[...] = alpha * dots * dots + 1.0
+    out_ref[...] = alpha * dots * dots + 1.0 if square else dots
 
 
-@functools.partial(jax.jit, static_argnames=("alpha", "g_tile", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("alpha", "square", "g_tile", "interpret"))
 def leaf_scores(h: Array, rows: Array, *, alpha: float = 100.0,
-                g_tile: int = 128, interpret: bool = False) -> Array:
-    """h: (G, r); rows: (G, B, r) -> (G, B) fp32 quadratic-kernel scores.
+                square: bool = True, g_tile: int = 128,
+                interpret: bool = False) -> Array:
+    """h: (G, r); rows: (G, B, r) -> (G, B) fp32 scores.
 
+    ``square=True`` gives quadratic-kernel scores alpha*dot^2+1;
+    ``square=False`` gives raw dots (alpha is ignored).
     G must divide by g_tile (ops.py pads)."""
     g, r = h.shape
     b = rows.shape[1]
     assert g % g_tile == 0, (g, g_tile)
-    kernel = functools.partial(_leaf_scores_kernel, alpha)
+    kernel = functools.partial(_leaf_scores_kernel, alpha, square)
     return pl.pallas_call(
         kernel,
         grid=(g // g_tile,),

@@ -55,15 +55,27 @@ def block_scores(h: Array, z: Array, cnt: Array,
     return out[:t, :n]
 
 
-def leaf_scores(h: Array, rows: Array, alpha: float = 100.0) -> Array:
-    """h: (G, r); rows: (G, B, r) -> (G, B) quadratic-kernel scores."""
+def _leaf_call(h: Array, rows: Array, *, alpha: float, square: bool) -> Array:
     g_tile = min(128, max(8, 1 << (h.shape[0] - 1).bit_length()))
     hp, g = _pad_to(h, 0, g_tile)
     rp, _ = _pad_to(rows, 0, g_tile)
-    out = _leaf_scores(hp, rp, alpha=alpha,
+    out = _leaf_scores(hp, rp, alpha=alpha, square=square,
                        g_tile=min(g_tile, hp.shape[0]),
                        interpret=_interpret())
     return out[:g]
+
+
+def leaf_scores(h: Array, rows: Array, alpha: float = 100.0) -> Array:
+    """h: (G, r); rows: (G, B, r) -> (G, B) quadratic-kernel scores."""
+    return _leaf_call(h, rows, alpha=alpha, square=True)
+
+
+def leaf_dots(h: Array, rows: Array) -> Array:
+    """h: (G, r); rows: (G, B, r) -> (G, B) raw dots <h_g, w_{g,b}>.
+
+    The exact-scoring step of serving-side beam retrieval: same kernel and
+    VMEM schedule as ``leaf_scores``, without the kernelization."""
+    return _leaf_call(h, rows, alpha=0.0, square=False)
 
 
 def sampled_loss(h: Array, w_neg: Array, logq: Array, pos_logit: Array,

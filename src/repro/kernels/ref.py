@@ -28,6 +28,12 @@ def leaf_scores_ref(h: Array, rows: Array, alpha: float) -> Array:
     return alpha * jnp.square(dots) + 1.0
 
 
+def leaf_dots_ref(h: Array, rows: Array) -> Array:
+    """h: (G, r); rows: (G, B, r) -> (G, B) raw dot products (logits)."""
+    return jnp.einsum("gbr,gr->gb", rows.astype(jnp.float32),
+                      h.astype(jnp.float32))
+
+
 def sampled_loss_ref(h: Array, w_neg: Array, logq: Array, pos_logit: Array,
                      m_total: int) -> Array:
     """Corrected sampled softmax with shared negatives (paper eq. 2-3).

@@ -1,6 +1,13 @@
 from repro.serve.engine import (  # noqa: F401
     make_prefill_step,
     make_decode_step,
+    make_topk_step,
+    decode_topk,
     abstract_decode_inputs,
     abstract_prefill_inputs,
+)
+from repro.serve.retrieval import (  # noqa: F401
+    RetrievalIndex,
+    build_index,
+    recall_at_k,
 )

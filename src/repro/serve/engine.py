@@ -1,6 +1,19 @@
 """Serving: prefill and decode steps (inference never samples the softmax —
-the paper's technique is training-only; inference is a full-head MIPS,
-paper §5.2).
+the paper's technique is training-only, paper §5.2).
+
+Two head paths exist at decode time:
+
+  * **dense** — the full-head MIPS: every shard scores its (n/tp, d) vocab
+    slice and the winners merge across the model axis
+    (``distributed.sharded_logits_argmax`` / ``sharded_logits_topk``).
+    O(n d) per token; always available.
+  * **index** — hierarchy-backed beam retrieval over the packed Gram index
+    (``serve/retrieval.py``, DESIGN.md §5): beam descent by kernel upper
+    bound, exact scoring of ~beam * leaf_size surviving classes.  Sublinear
+    in n; exact at full beam, recall-tunable below it.  ``make_topk_step``
+    uses it whenever an index is passed and falls back to the dense path
+    otherwise.  Index arrays ride the same vocab-sharded P('model') layout
+    as the training statistics (DESIGN.md §2.5).
 
 The decode path is the `decode_*` / `long_*` dry-run target: one new token
 against a KV cache of seq_len.  KV caches are sequence-sharded over the
@@ -20,45 +33,87 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.core import distributed
 from repro.models import api, encdec, transformer
-from repro.sharding.rules import ShardCtx, param_specs_for
+from repro.serve import retrieval
+from repro.sharding.rules import (
+    ShardCtx,
+    gather_head_fd,
+    head_fd_axes,
+    param_specs_for,
+)
 from repro.utils.compat import shard_map
 
 Array = jax.Array
 
 
 def _argmax_island(cfg: ArchConfig, ctx: ShardCtx, head, h2d):
-    """Greedy next token over the vocab-sharded head."""
+    """Greedy next token over the vocab-sharded head.
+
+    head: (nvp, d) vocab-sharded P('model', Fd); h2d: (B, d) data-sharded
+    -> (B,) int32 global argmax ids — the k=1 case of the dense
+    ``decode_topk`` path (identical tie-breaking: lowest class id wins).
+    """
+    ids, _ = decode_topk(cfg, ctx, head, h2d, 1)
+    return ids[:, 0]
+
+
+def decode_topk(cfg: ArchConfig, ctx: ShardCtx, head, h2d, k: int, *,
+                index: retrieval.RetrievalIndex | None = None,
+                beam: int | None = None):
+    """Top-k (ids, logits) for a batch of hidden states (DESIGN.md §5).
+
+    head: (nvp, d) vocab-sharded head table (dense fallback only);
+    h2d: (B, d) hidden states -> ids (B, k) int32 global class ids and
+    logits (B, k) fp32, sorted descending.  With an ``index`` the beam
+    retrieval path runs (exact at full beam, ``beam`` = recall knob);
+    without one the dense sharded top-k head is the fallback.
+    """
+    if index is not None:
+        return retrieval.decode_topk(index, h2d, k, beam, ctx)
     if ctx.mesh is None:
-        logits = h2d.astype(jnp.float32) @ head.astype(jnp.float32).T
-        return jnp.argmax(logits[..., :cfg.vocab_size], axis=-1)
-    # head feature dim follows the 'Fd' rule: sharded over data unless the
-    # serve mode is plain TP (params replicated over data).
-    head_dsp = (None if ctx.mode == "tp" else
-                (ctx.data_axes if len(ctx.data_axes) > 1
-                 else ctx.data_axes[0]))
+        return retrieval.dense_topk(head, h2d, k, n_valid=cfg.vocab_size)
     dsp = ctx.data_spec()
     dataspec = None if h2d.shape[0] % ctx.dp else dsp
     mdl = ctx.model_axis
     v_l = head.shape[0] // ctx.tp
 
     def island(head_l, h_l):
-        head_full = head_l
-        if ctx.mode != "tp":
-            for a in ctx.data_axes[::-1]:
-                head_full = jax.lax.all_gather(head_full, a, axis=1,
-                                               tiled=True)
+        head_full = gather_head_fd(ctx, head_l)
         my = jax.lax.axis_index(mdl)
         n_valid = jnp.clip(cfg.vocab_size - my * v_l, 0, v_l)
-        # Mask padded vocab rows to -inf before the cross-shard argmax.
         bias = jnp.where(jnp.arange(v_l) < n_valid, 0.0, -jnp.inf)
-        ids, _ = distributed.sharded_logits_argmax(
-            head_full, h_l, axis_name=mdl, bias_local=bias)
-        return ids
+        return distributed.sharded_logits_topk(
+            head_full, h_l, k, axis_name=mdl, bias_local=bias)
 
     return shard_map(
         island, mesh=ctx.mesh, check_vma=False,
-        in_specs=(P(mdl, head_dsp), P(dataspec, None)),
-        out_specs=P(dataspec))(head, h2d)
+        in_specs=(P(mdl, head_fd_axes(ctx)), P(dataspec, None)),
+        out_specs=(P(dataspec, None), P(dataspec, None)))(head, h2d)
+
+
+def make_topk_step(cfg: ArchConfig, ctx: ShardCtx, k: int, *,
+                   index: retrieval.RetrievalIndex | None = None,
+                   beam: int | None = None):
+    """topk_step(params, token (B,1), caches, pos (B,)) ->
+    (ids (B, k), logits (B, k), caches).
+
+    The `decode_topk` serving path: one decoder step, then top-k over the
+    vocab through the retrieval index (or the dense head when ``index`` is
+    None).  ``ids[:, 0]`` equals ``make_decode_step``'s greedy token when
+    the beam is full (or the index absent)."""
+
+    def step(params, token, caches, pos):
+        if cfg.family == "encdec":
+            h, caches = encdec.decode_step(params, token, caches, pos, cfg,
+                                           ctx)
+        else:
+            h, caches = transformer.decode_step(params, token, caches, pos,
+                                                cfg, ctx)
+        head = api.head_table(params, cfg)
+        ids, logits = decode_topk(cfg, ctx, head, h[:, 0, :], k,
+                                  index=index, beam=beam)
+        return ids, logits, caches
+
+    return step
 
 
 def make_decode_step(cfg: ArchConfig, ctx: ShardCtx):

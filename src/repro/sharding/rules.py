@@ -217,6 +217,25 @@ def ctx_for_serve(mesh: Mesh, cfg) -> ShardCtx:
     return mesh_ctx(mesh, mode="tp_fsdp" if cfg.serve_fsdp else "tp")
 
 
+def head_fd_axes(ctx: ShardCtx):
+    """Mesh axes of the head/embedding FEATURE dim (the 'Fd' rule): sharded
+    over the data axes except in plain-TP serving, where params are
+    replicated over data.  Use as the second entry of the head's in_spec."""
+    if ctx.mode == "tp":
+        return None
+    return ctx.data_axes if len(ctx.data_axes) > 1 else ctx.data_axes[0]
+
+
+def gather_head_fd(ctx: ShardCtx, head_local):
+    """Inside a shard_map island: all-gather a (v_l, d/fsdp) head shard's
+    feature dim over the data axes, undoing the 'Fd' sharding.  No-op in
+    plain-TP mode (features already full)."""
+    if ctx.mode != "tp":
+        for a in ctx.data_axes[::-1]:
+            head_local = lax.all_gather(head_local, a, axis=1, tiled=True)
+    return head_local
+
+
 # ---------------------------------------------------------------------------
 # Parameter spec rules.  First regex (on the '/'-joined path) wins.
 # Stacked layer params get leading Nones automatically.

@@ -355,6 +355,26 @@ def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
     return train_step
 
 
+def export_retrieval_index(state: TrainState, cfg: ArchConfig, ctx: ShardCtx,
+                           leaf_size: int | None = None):
+    """Packed serving index (DESIGN.md §5) from a trained state.
+
+    Builds UNPROJECTED hierarchy statistics from the current head table —
+    one Gram matmul, the same cost as a sampler refresh.  The carried
+    training triple is deliberately NOT reused: it may be projected
+    (useless for exact logits) and is at least one optimizer update stale
+    (refresh ran before the step's gradient was applied), while serving
+    decode must score with the embeddings actually being served.  The
+    returned ``RetrievalIndex`` is a plain pytree — save it with the
+    checkpoint (``CheckpointManager.save``) and a restarted server decodes
+    without a rebuild."""
+    from repro.serve import retrieval
+
+    head = api.head_table(state.params, cfg)
+    return retrieval.build_index(head, ctx, leaf_size=leaf_size,
+                                 vocab_size=cfg.vocab_size)
+
+
 def init_train_state(key, cfg: ArchConfig, ctx: ShardCtx,
                      opt: GradientTransform, max_len: int = 4096
                      ) -> TrainState:

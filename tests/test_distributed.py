@@ -58,6 +58,15 @@ def test_tree_sampler_sharded_train():
 
 
 @pytest.mark.slow
+def test_decode_topk_sharded():
+    """Hierarchy-backed top-k decode on a 2x4 mesh: P('model') index layout,
+    per-shard beam + cross-shard merge == dense sharded top-k at full beam,
+    on untrained and briefly-trained models (DESIGN.md §5)."""
+    out = _run("check_decode_topk.py")
+    assert "DECODE TOPK CHECKS PASSED" in out
+
+
+@pytest.mark.slow
 def test_pure_fsdp_mode():
     """pure_fsdp: batch over the whole mesh, vocab-parallel head island,
     batch-spill onto the sequence dim for small batches."""
