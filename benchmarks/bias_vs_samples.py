@@ -1,12 +1,21 @@
-"""Paper Figure 2: final model quality vs sampling distribution x m.
+"""Paper Figure 2: final model quality vs sampling distribution x m, plus a
+direct gradient-bias table across sampler families.
 
-Trains the same reduced model to (near-)convergence under each sampler and
-sample size, then reports the FULL-softmax eval loss.  The paper's claims:
+Two sections:
 
-  (C1) quadratic needs 1-2 orders of magnitude fewer samples than uniform;
-  (C2) softmax sampling quality is independent of m.
+  * ``run``       — trains the same reduced model to (near-)convergence
+    under each sampler and sample size, then reports the FULL-softmax eval
+    loss.  The paper's claims: (C1) quadratic needs 1-2 orders of magnitude
+    fewer samples than uniform; (C2) softmax sampling quality is independent
+    of m.
+  * ``grad_bias`` — measures the eq. 5 estimator's bias directly on a toy
+    softmax model: |E[sampled grad] - (p - y)| per sampler x m, Monte-Carlo
+    over draws from each family's EXACT sampling distribution.  The RFF
+    family's selling point in one table: q ~ exp(o/tau) tracks the softmax
+    closer than the quadratic kernel at equal m (Rawat et al. 2019,
+    DESIGN.md §2.7), so its rows sit strictly below the quadratic rows.
 
-Quick mode keeps the sweep CPU-sized; --full widens it (EXPERIMENTS.md).
+Quick mode keeps the sweeps CPU-sized; --full widens them (EXPERIMENTS.md).
 """
 from __future__ import annotations
 
@@ -17,7 +26,94 @@ from benchmarks.common import train_small
 from repro.configs import get_config
 
 SAMPLERS_DEFAULT = ["uniform", "softmax", "block-quadratic",
-                    "quadratic-oracle"]
+                    "quadratic-oracle", "rff"]
+
+GRAD_BIAS_SAMPLERS = ["uniform", "quadratic-oracle", "rff", "softmax"]
+
+
+def grad_bias(samplers=None, ms=(16, 64), n=256, d=12, n_queries=4,
+              reps=8000, rff_dim=512, seed=0, quiet=False, out_json=None):
+    """Gradient bias of the eq. 5 estimator per sampler family x m.
+
+    Draws negatives from each family's exact all-class distribution over the
+    NEGATIVE classes (positive excluded and renormalized — Theorem 2.1's q;
+    identical in law to the sampler's own draws, brute-force cheap at toy
+    scale) and compares the Monte-Carlo mean of the sampled gradient against
+    the full-softmax gradient p - y.  With the positive excluded, the
+    softmax row sits at the Monte-Carlo noise floor (~1e-3) and every other
+    row's value is real bias.  Returns rows of {"sampler", "m", "bias_linf",
+    "bias_l2"} (mean over queries); the rff rows sit strictly below the
+    quadratic rows at equal m.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.sampled_softmax import (
+        full_softmax_grad_wrt_logits,
+        sampled_softmax_grad_wrt_logits,
+    )
+    from repro.core.samplers import make_sampler
+
+    samplers = samplers or GRAD_BIAS_SAMPLERS
+    key = jax.random.PRNGKey(seed)
+    # Toy softmax model in the regime a trained head lives in: a few-nats
+    # logit spread — spiky enough that a mismatched q has REAL bias, inside
+    # the norm range where D ~ 512 positive-RFF node masses stay informative
+    # (DESIGN.md §2.7); exact leaf scoring does the rest.
+    w = jax.random.normal(key, (n, d)) * 0.5
+    hs = jax.random.normal(jax.random.fold_in(key, 1), (n_queries, d)) * 1.2
+
+    def logq_for(name, h):
+        if name == "uniform":
+            return jnp.full((n,), -np.log(n))
+        if name == "rff":
+            sampler = make_sampler("rff", dim=rff_dim, leaf_size=16)
+            state = sampler.init(jax.random.fold_in(key, 2), w)
+            return sampler.all_class_logq(state, h)
+        sampler = make_sampler(name)
+        state = sampler.init(jax.random.fold_in(key, 2), w)
+        return sampler.logq_all(state, h)
+
+    acc = {(name, m): ([], []) for name in samplers for m in ms}
+    for t in range(n_queries):
+        h = hs[t]
+        o = w @ h
+        label = jax.random.categorical(jax.random.fold_in(key, 10 + t), o)
+        full = full_softmax_grad_wrt_logits(o[None], label[None])[0]
+        for name in samplers:
+            logq = logq_for(name, h)
+            # the theorem's q excludes the positive (a positive drawn as a
+            # negative double-counts in the partition estimate)
+            logq = jnp.where(jnp.arange(n) == label, -jnp.inf, logq)
+            logq = logq - jax.nn.logsumexp(logq)
+            for m in ms:
+                def one(k, m=m, logq=logq):
+                    ids = jax.random.categorical(k, logq, shape=(m,))
+                    return sampled_softmax_grad_wrt_logits(
+                        o, label, ids, logq[ids], n=n)
+
+                keys = jax.random.split(
+                    jax.random.fold_in(key, 100 + t), reps)
+                est = jax.vmap(one)(keys).mean(0)
+                diff = np.asarray(est - full)
+                acc[(name, m)][0].append(np.abs(diff).max())
+                acc[(name, m)][1].append(np.linalg.norm(diff))
+    rows = []
+    for name in samplers:
+        for m in ms:
+            linf, l2 = acc[(name, m)]
+            rows.append({"sampler": name, "m": int(m),
+                         "bias_linf": float(np.mean(linf)),
+                         "bias_l2": float(np.mean(l2))})
+            if not quiet:
+                print(f"  grad-bias {name:18s} m={m:4d} "
+                      f"linf={rows[-1]['bias_linf']:.4f} "
+                      f"l2={rows[-1]['bias_l2']:.4f}", flush=True)
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
 
 
 def run(samplers=None, ms=(4, 16, 64), steps=400, out_json=None,
@@ -44,14 +140,20 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--grad-bias-only", action="store_true")
     args = ap.parse_args()
+    if args.grad_bias_only:
+        grad_bias(out_json=args.out)
+        return
     if args.full:
+        grad_bias(ms=(4, 16, 64, 256), reps=8000)
         run(samplers=["uniform", "unigram", "softmax", "abs-softmax",
                       "block-quadratic", "quadratic-oracle",
-                      "quartic-oracle"],
+                      "quartic-oracle", "rff"],
             ms=(2, 4, 8, 16, 32, 64, 128, 256), steps=1200,
             vocab=8192, out_json=args.out)
     else:
+        grad_bias()
         run(out_json=args.out)
 
 

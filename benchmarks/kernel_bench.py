@@ -34,6 +34,20 @@ def run(quiet=False, interpret_too=False):
         time_fn(jax.jit(lambda *a: ref.block_scores_ref(*a, 100.0)),
                 h, z, cnt)))
 
+    wl = jax.random.normal(key, (64, 64, 64)) * 0.3  # (L, B, d) leaf table
+    om = jax.random.normal(key, (128, 64))            # (D, d) directions
+    mask = jax.numpy.ones((64, 64))
+    shift = jax.numpy.asarray(2.0)
+    rows.append(csv_row(
+        "rff_features/jnp-ref/64x64x64xD128",
+        time_fn(jax.jit(lambda *a: ref.rff_features_ref(*a, 1.0)),
+                wl, om, mask, shift)))
+    if on_tpu or interpret_too:
+        rows.append(csv_row(
+            "rff_features/pallas/64x64x64xD128",
+            time_fn(lambda *a: ops.rff_features(*a, tau=1.0),
+                    wl, om, mask, shift)))
+
     hh = jax.random.normal(key, (1024, 128))
     wn = jax.random.normal(key, (512, 128))
     lq = jax.numpy.zeros((512,))

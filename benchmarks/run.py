@@ -3,47 +3,118 @@
 Prints ``name,us_per_call,derived`` CSV rows (timing benches) and summary
 tables (training-quality benches run in quick mode here; the full sweeps
 behind EXPERIMENTS.md run via each module's --full flag).
+
+Every section also lands a machine-readable ``BENCH_<name>.json`` next to
+the repo root (or ``--out-dir``) so perf trajectories can be diffed across
+commits without scraping stdout — the schema is documented in
+benchmarks/README.md.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 
+def _normalize_rows(rows) -> list[dict]:
+    """CSV-string rows ("name,us,derived"), dict rows, and curve dicts all
+    flatten to a list of JSON objects."""
+    if isinstance(rows, dict):  # convergence curves: {label: [(step, loss)]}
+        return [{"name": k, "curve": [[int(s), float(l)] for s, l in v]}
+                for k, v in rows.items()]
+    out = []
+    for r in rows or []:
+        if isinstance(r, str):
+            name, us, derived = (r.split(",", 2) + ["", ""])[:3]
+            out.append({"name": name, "us_per_call": float(us),
+                        "derived": derived})
+        else:
+            out.append(dict(r))
+    return out
+
+
+def emit_bench_json(name: str, rows, out_dir: str, t0: float) -> None:
+    """Write BENCH_<name>.json (schema_version 1; see benchmarks/README.md)."""
+    import jax
+
+    payload = {
+        "schema_version": 1,
+        "benchmark": name,
+        "created_unix": int(time.time()),
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "wall_s": round(time.time() - t0, 3),
+        "rows": _normalize_rows(rows),
+    }
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"  -> {path} ({len(payload['rows'])} rows)")
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))),
+        help="where BENCH_<name>.json files land (default: repo root)")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+
+    t_all = time.time()
     t0 = time.time()
     print("# sampler_cost (paper §3.2 runtime) — name,us_per_call,derived")
     from benchmarks import sampler_cost
-    sampler_cost.run(ns=(4096, 16384))
+    emit_bench_json("sampler_cost", sampler_cost.run(ns=(4096, 16384)),
+                    out_dir, t0)
 
+    t0 = time.time()
     print("\n# decode_topk (serving MIPS, DESIGN.md §5) — "
           "name,us_per_call,derived")
     from benchmarks import decode_topk
-    decode_topk.run(ns=(4096,))
+    emit_bench_json("decode_topk", decode_topk.run(ns=(4096,)), out_dir, t0)
 
+    t0 = time.time()
     print("\n# kernel_bench — name,us_per_call,derived")
     from benchmarks import kernel_bench
-    kernel_bench.run()
+    emit_bench_json("kernel_bench", kernel_bench.run(), out_dir, t0)
 
-    print("\n# bias_vs_samples (paper Fig. 2, quick mode)")
+    t0 = time.time()
+    print("\n# grad_bias (eq. 5 estimator bias per family x m; "
+          "rff < quadratic at equal m)")
     from benchmarks import bias_vs_samples
-    bias_vs_samples.run(ms=(4, 32), steps=150,
-                        samplers=["uniform", "softmax", "block-quadratic"])
+    emit_bench_json("grad_bias", bias_vs_samples.grad_bias(reps=5000),
+                    out_dir, t0)
 
+    t0 = time.time()
+    print("\n# bias_vs_samples (paper Fig. 2, quick mode)")
+    emit_bench_json(
+        "bias_vs_samples",
+        bias_vs_samples.run(ms=(4, 32), steps=150,
+                            samplers=["uniform", "softmax",
+                                      "block-quadratic", "rff"]),
+        out_dir, t0)
+
+    t0 = time.time()
     print("\n# convergence_speed (paper Fig. 3, quick mode)")
     from benchmarks import convergence_speed
-    convergence_speed.run(steps=150)
+    emit_bench_json("convergence_speed", convergence_speed.run(steps=150),
+                    out_dir, t0)
 
+    t0 = time.time()
     print("\n# roofline (from dry-run artifacts, if present)")
     try:
         from benchmarks import roofline
         rows = roofline.run(quiet=False)
-        if not rows:
+        if rows:
+            emit_bench_json("roofline", rows, out_dir, t0)
+        else:
             print("  (no dry-run artifacts under experiments/dryrun — run "
                   "python -m repro.launch.dryrun --all first)")
     except Exception as e:  # noqa: BLE001
         print(f"  roofline skipped: {e}")
 
-    print(f"\n# total benchmark wall time: {time.time()-t0:.1f}s")
+    print(f"\n# total benchmark wall time: {time.time()-t_all:.1f}s")
 
 
 if __name__ == "__main__":

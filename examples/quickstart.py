@@ -1,10 +1,11 @@
-"""Quickstart: kernel-based adaptive sampled softmax in ~60 lines.
+"""Quickstart: kernel-based adaptive sampled softmax in ~70 lines.
 
-Builds a toy class-embedding table, samples negatives three ways (uniform,
-the paper's divide & conquer tree, the TPU two-level block sampler), and
-shows that (a) the kernel samplers report exact log-probabilities and
-(b) the corrected sampled-softmax loss approaches the full softmax loss as
-m grows — fastest for the adaptive kernels.
+Builds a toy class-embedding table, samples negatives four ways (uniform,
+the paper's divide & conquer tree, the TPU two-level block sampler, and the
+exp-kernel RFF hierarchy), and shows that (a) the kernel samplers report
+exact log-probabilities and (b) the corrected sampled-softmax loss
+approaches the full softmax loss as m grows — fastest for the adaptive
+kernels.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -41,9 +42,17 @@ ids_b, logq_b = blocks.sample_shared(bstats, kernel, h, m=128,
                                      key=jax.random.PRNGKey(4))
 print(f"block sampler (batch-shared): {len(set(ids_b.tolist()))} distinct")
 
-# --- bias vs m for three samplers -------------------------------------------
-for name in ("uniform", "block-quadratic-shared", "softmax"):
-    sampler = make_sampler(name)
+# --- the exp-kernel RFF hierarchy (q ~ exp(o/tau); DESIGN.md §2.7) ----------
+rff = make_sampler("rff", dim=128, leaf_size=64)
+rstate = rff.init(jax.random.PRNGKey(6), w)
+ids_r, logq_r = rff.sample(rstate, h[0], m=128, key=jax.random.PRNGKey(7))
+print(f"rff sampler: {len(set(ids_r.tolist()))} distinct negatives, "
+      f"logq in [{float(logq_r.min()):.2f}, {float(logq_r.max()):.2f}]")
+
+# --- bias vs m across sampler families --------------------------------------
+for name in ("uniform", "block-quadratic-shared", "rff", "softmax"):
+    sampler = make_sampler(name, **({"dim": 128, "leaf_size": 64}
+                                    if name == "rff" else {}))
     state = sampler.init(jax.random.PRNGKey(5), w)
     print(f"\n{name}:")
     for m in (16, 64, 256):

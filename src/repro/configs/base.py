@@ -88,6 +88,11 @@ class ArchConfig:
     sampler_alpha: float = 100.0
     sampler_refresh_every: int = 1
     abs_softmax: bool = False
+    # rff sampler family (sampler="rff"; DESIGN.md §2.7): feature dim D of
+    # the positive random-feature map and the exp-kernel temperature tau.
+    # rff ignores sampler_proj_rank — omega: (D, d) IS its projection.
+    rff_dim: int = 128
+    rff_tau: float = 1.0
 
     # parallelism (DESIGN.md §7 + EXPERIMENTS.md §Perf)
     train_sharding: str = "tp_fsdp"  # tp_fsdp | pure_fsdp | tp
@@ -160,6 +165,7 @@ class ArchConfig:
             m_negatives=32,
             sampler_block=32,
             sampler_proj_rank=None,
+            rff_dim=64,
             remat=False,
         )
         if self.n_heads:

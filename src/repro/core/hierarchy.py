@@ -52,7 +52,13 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.kernel_fns import SamplingKernel, gram_set_mass
+from repro.core.kernel_fns import (
+    SamplingKernel,
+    gram_set_mass,
+    rff_log_phi,
+    rff_logshift_bound,
+    rff_phi,
+)
 from repro.utils.misc import log2_int, next_pow2
 
 Array = jax.Array
@@ -430,6 +436,29 @@ def descend(stats: HierarchyStats, kernel: SamplingKernel, hq: Array,
     return ids.astype(jnp.int32), logq + log_within
 
 
+def _all_class_from_levels(level_log_mass, within_logits, n: int) -> Array:
+    """Telescoping node probabilities + within-leaf conditional -> (n,) logq.
+
+    level_log_mass: list over levels root..leaf of (nodes_l,) log node masses.
+    within_logits: (num_leaves, leaf_size) within-leaf log scores (-inf pads).
+    Shared by the Gram and the feature-sum oracles."""
+    log_node_prev = jnp.zeros((1,))
+    for lvl, lm in enumerate(level_log_mass):
+        if lvl == 0:
+            log_node = jnp.zeros((lm.shape[0],))
+        else:
+            parent = jnp.repeat(log_node_prev, 2)
+            sibling_sum = jnp.repeat(jnp.logaddexp(lm[0::2], lm[1::2]), 2)
+            log_node = parent + lm - sibling_sum
+        log_node_prev = log_node
+    # Entirely-dead leaves (all rows at/after n_valid) would NaN through
+    # log_softmax; their entries are exactly zero-probability.
+    log_within = jnp.where(jnp.isneginf(within_logits), -jnp.inf,
+                           jax.nn.log_softmax(within_logits, axis=-1))
+    out = (log_node_prev[:, None] + log_within).reshape(-1)
+    return out[:n]
+
+
 def all_class_logq(stats: HierarchyStats, kernel: SamplingKernel,
                    hq: Array) -> Array:
     """Exact log-probability the hierarchy assigns to EVERY class (oracle).
@@ -438,18 +467,11 @@ def all_class_logq(stats: HierarchyStats, kernel: SamplingKernel,
     and multiplies by the within-leaf conditional.  O(n r^2) — test use only.
     hq: (r,) one projected query.  Returns (n,) for the static row bound n.
     """
-    log_node_prev = jnp.zeros((1,))
-    for lvl in range(stats.depth + 1):
-        mass = gram_set_mass(kernel, stats.levels_z[lvl],
-                             stats.levels_cnt[lvl], hq)
-        lm = jnp.log(jnp.maximum(mass, 1e-30))
-        if lvl == 0:
-            log_node = jnp.zeros((lm.shape[0],))
-        else:
-            parent = jnp.repeat(log_node_prev, 2)
-            sibling_sum = jnp.repeat(jnp.logaddexp(lm[0::2], lm[1::2]), 2)
-            log_node = parent + lm - sibling_sum
-        log_node_prev = log_node
+    level_lm = [
+        jnp.log(jnp.maximum(
+            gram_set_mass(kernel, stats.levels_z[lvl],
+                          stats.levels_cnt[lvl], hq), 1e-30))
+        for lvl in range(stats.depth + 1)]
     # Within-leaf conditionals.
     scores = kernel.of_dot(jnp.einsum("lbr,r->lb", stats.wq, hq))
     ids = (jnp.arange(stats.num_leaves)[:, None] * stats.leaf_size
@@ -457,9 +479,301 @@ def all_class_logq(stats: HierarchyStats, kernel: SamplingKernel,
     scores = jnp.where(ids < stats.n_valid, scores, 0.0)
     logit = jnp.where(scores > 0, jnp.log(jnp.maximum(scores, 1e-30)),
                       -jnp.inf)
-    # Entirely-dead leaves (all rows at/after n_valid) would NaN through
-    # log_softmax; their entries are exactly zero-probability.
-    log_within = jnp.where(jnp.isneginf(logit), -jnp.inf,
-                           jax.nn.log_softmax(logit, axis=-1))
-    out = (log_node_prev[:, None] + log_within).reshape(-1)
-    return out[: stats.n]
+    return _all_class_from_levels(level_lm, logit, stats.n)
+
+
+# --- feature-sum hierarchy (positive RFF / exp kernel; DESIGN.md §2.7) -------
+#
+# The quadratic hierarchy realizes the paper's summary statistic z(C) as a
+# Gram MATRIX because the degree-2 feature space factors that way.  For the
+# exp kernel the feature space is the explicit positive-RFF map phi: R^d ->
+# R^D (kernel_fns.rff_phi), and z(C) is literally what eq. 8 says it is:
+#
+#     z(C) = sum_{j in C} phi(w_j)        (nodes, D) per level
+#     <phi(h), z(C)>  ~  sum_{j in C} exp(<h, w_j> / tau)
+#
+# so every level-mass evaluation is ONE matmul of the query features against
+# the level's feature-sum table, and the SAME level-synchronous descent,
+# heap packing, and sparse path refresh apply verbatim.  Within a sampled
+# leaf the classes are scored with the EXACT exp kernel (log score =
+# <h, w>/tau — no features, no exp/overflow), so the reported log-q is the
+# exact log-probability of the draw under the hierarchy's distribution; the
+# RFF approximation only shapes q at the node level, never the correctness
+# of the eq. 2 estimator.
+#
+# Log-domain normalization: features are built as exp(log phi - logshift)
+# with a build-time shift (rff_logshift_bound) and queries as
+# exp(log phi - max_k), so nothing overflows; both shifts scale all masses
+# of a level uniformly and cancel in eq. 9's branch probabilities.
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FeatureStats:
+    """Per-level positive-RFF feature sums + the raw sampling table.
+
+    levels_f:  tuple over levels root..leaf of (nodes_l, D) fp32 NON-NEGATIVE
+               feature sums z(C) = sum_{j in C} phi(w_j) (eq. 8's summary
+               statistic, materialized — DESIGN.md §2.7); level l of the full
+               binary tree holds 2^l nodes.
+    wq:        (num_leaves, leaf_size, d) fp32 RAW class embeddings (no
+               projection — the exact exp-kernel leaf scores and therefore
+               the reported log-q need original-space dots; zero rows for
+               padding and rows at/after ``n_valid``).
+    logshift:  () fp32 log-domain shift baked into every feature in
+               ``levels_f`` (common to all nodes, cancels in sampling).
+               ``update_feature_rows`` must reuse it so deltas stay on the
+               same scale.
+    n_valid:   scalar int32 — number of real classes (runtime-masked pads).
+    n:         static row-count bound (table size at trace time).
+    """
+
+    levels_f: tuple[Array, ...]
+    wq: Array
+    logshift: Array
+    n_valid: Array
+    n: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def depth(self) -> int:
+        return len(self.levels_f) - 1
+
+    @property
+    def num_leaves(self) -> int:
+        return self.wq.shape[0]
+
+    @property
+    def leaf_size(self) -> int:
+        return self.wq.shape[1]
+
+    @property
+    def n_pad(self) -> int:
+        return self.num_leaves * self.leaf_size
+
+    @property
+    def feature_dim(self) -> int:
+        return self.levels_f[0].shape[-1]
+
+
+def build_features(w: Array, leaf_size: int, omega: Array, tau: float, *,
+                   n_valid: Array | int | None = None,
+                   use_kernels: bool | None = None) -> FeatureStats:
+    """Build the RFF hierarchy bottom-up: leaf feature sums, pairwise parents.
+
+    w: (n, d) class embeddings (one vocab shard's rows inside the P('model')
+    island); omega: (D, d) fixed Gaussian directions (the RFF analogue of the
+    JL projection — drawn once, carried like ``proj``).  Cost: one (n, D)
+    feature matmul (the ``rff_features`` Pallas kernel fuses it with the
+    per-leaf reduction) + O(num_leaves * D) for the upper levels.
+    """
+    if use_kernels is None:
+        use_kernels = jax.default_backend() == "tpu"
+    n_rows, _ = w.shape
+    if n_valid is None:
+        n_valid = n_rows
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    wq = w.astype(jnp.float32)
+    d = wq.shape[-1]
+    leaf_size = next_pow2(leaf_size)
+    num_leaves = next_pow2(max(1, -(-n_rows // leaf_size)))
+    pad = num_leaves * leaf_size - n_rows
+    wq = jnp.pad(wq, ((0, pad), (0, 0)))
+    row_ok = jnp.arange(num_leaves * leaf_size) < n_valid
+    wq = jnp.where(row_ok[:, None], wq, 0.0)
+    # Zero rows still have phi = exp(-logshift) > 0, so padding needs an
+    # explicit mask (the Gram build gets this for free from w w^T = 0).
+    mask = row_ok.astype(jnp.float32).reshape(num_leaves, leaf_size)
+    wq = wq.reshape(num_leaves, leaf_size, d)
+    logshift = rff_logshift_bound(wq.reshape(-1, d), omega, tau)
+
+    if use_kernels:
+        from repro.kernels import ops
+        f_leaf = ops.rff_features(wq, omega, mask, logshift, tau=tau)
+    else:
+        feats = rff_phi(wq, omega, tau, logshift)  # (L, B, D)
+        f_leaf = jnp.einsum("lbk,lb->lk", feats, mask)
+
+    levels_f = [f_leaf]
+    while levels_f[0].shape[0] > 1:
+        child = levels_f[0]
+        levels_f.insert(0, child[0::2] + child[1::2])
+    return FeatureStats(tuple(levels_f), wq, logshift, n_valid, n_rows)
+
+
+def update_feature_rows(stats: FeatureStats, ids: Array, w_new: Array,
+                        omega: Array, tau: float) -> FeatureStats:
+    """Paper Fig. 1b for the feature hierarchy: scatter Delta phi(w) along
+    each leaf->root path after the embeddings of ``ids`` change to ``w_new``.
+
+    ids: (k,) LOCAL class indices; w_new: (k, d).  Cost O(k * D * (d + depth)).
+    New features reuse the stats' stored ``logshift`` (a grown row may exceed
+    exp(0) = 1 — harmless far below fp32 overflow).  Duplicate ids are NOT
+    allowed (undefined order of old-row reads).
+    """
+    leaf_of = ids // stats.leaf_size
+    off = ids % stats.leaf_size
+    w32 = w_new.astype(jnp.float32)
+    phi_new = rff_phi(w32, omega, tau, stats.logshift)
+    phi_old = rff_phi(stats.wq[leaf_of, off], omega, tau, stats.logshift)
+    delta = phi_new - phi_old  # (k, D)
+    wq = stats.wq.at[leaf_of, off].set(w32)
+
+    depth = stats.depth
+    new_f = []
+    for lvl in range(depth + 1):
+        node_of = leaf_of >> (depth - lvl)
+        new_f.append(stats.levels_f[lvl].at[node_of].add(delta))
+    return FeatureStats(tuple(new_f), wq, stats.logshift, stats.n_valid,
+                        stats.n)
+
+
+def count_levels(n_valid: Array, num_leaves: int, leaf_size: int,
+                 depth: int) -> tuple[Array, ...]:
+    """Per-level true class counts root..leaf (pure function of n_valid)."""
+    levels = [leaf_counts(n_valid, num_leaves, leaf_size)]
+    for _ in range(depth):
+        child = levels[0]
+        levels.insert(0, child[0::2] + child[1::2])
+    return tuple(levels)
+
+
+def to_feature_heap(stats: FeatureStats) -> tuple[Array, Array]:
+    """Pack the feature levels into the flat heap carriage (DESIGN.md §2.5).
+
+    Returns (f_heap: (2L, D), aux_heap: (2L,)).  The f heap is
+    ``pack_levels`` of the per-level feature sums — the same layout contract
+    as the Gram heap, with trailing shape (D,) instead of (r, r).  The aux
+    heap carries the per-node true counts (diagnostics / load telemetry) and
+    stores ``logshift`` in the heap's single padding row (the last row, zero
+    by the packing contract and owned per shard) so carried statistics can be
+    sparsely updated on the same scale they were built."""
+    aux = pack_levels(count_levels(stats.n_valid, stats.num_leaves,
+                                   stats.leaf_size, stats.depth))
+    aux = aux.at[-1].set(stats.logshift)
+    return pack_levels(stats.levels_f), aux
+
+
+def from_feature_heap(f_heap: Array, aux_heap: Array, wq: Array,
+                      n_valid: Array, n: int | None = None) -> FeatureStats:
+    """Inverse of ``to_feature_heap``: static slices back into level tuples.
+
+    f_heap: (2L, D); aux_heap: (2L,) with logshift in the final padding row;
+    wq: (L, leaf, d) — one shard's slices when carried P('model')-sharded."""
+    num_leaves = wq.shape[0]
+    depth = log2_int(num_leaves)
+    assert f_heap.shape[0] == heap_rows(num_leaves), (
+        f_heap.shape, num_leaves)
+    if n is None:
+        n = num_leaves * wq.shape[1]
+    return FeatureStats(unpack_levels(f_heap, depth), wq, aux_heap[-1],
+                        jnp.asarray(n_valid, jnp.int32), n)
+
+
+def _query_features(h: Array, omega: Array, tau: float) -> Array:
+    """Per-query log-domain-normalized features: (T, d) -> (T, D).
+
+    The per-query max shift is exact (cheap, O(T D)) and cancels in the
+    within-query branch probabilities."""
+    lphi = rff_log_phi(h, omega, tau)  # (T, D)
+    c = jax.lax.stop_gradient(jnp.max(lphi, axis=-1, keepdims=True))
+    return jnp.exp(lphi - c)
+
+
+def leaf_logits_exp(stats: FeatureStats, hq: Array, leaf_idx: Array,
+                    tau: float, use_kernels: bool) -> Array:
+    """EXACT within-leaf exp-kernel log-scores: log K = <h, w>/tau.
+
+    Works in log domain end to end — no exp, no overflow, no positivity
+    floor.  Routed through the ``leaf_scores`` kernel's raw-dot mode when
+    ``use_kernels``.  hq: (T, d) raw queries; leaf_idx: (T, m) ->
+    (T, m, leaf_size) log scores, padding masked to -inf.
+    """
+    t, m = leaf_idx.shape
+    b = stats.leaf_size
+    rows = stats.wq[leaf_idx]  # (T, m, B, d)
+    if use_kernels:
+        from repro.kernels import ops
+        flat_rows = rows.reshape(t * m, b, -1)
+        flat_h = jnp.repeat(hq, m, axis=0)
+        dots = ops.leaf_dots(flat_h, flat_rows).reshape(t, m, b)
+    else:
+        dots = jnp.einsum("tmbr,tr->tmb", rows, hq)
+    logit = dots / jnp.asarray(tau, jnp.float32)
+    ids = leaf_idx[..., None] * b + jnp.arange(b)
+    return jnp.where(ids < stats.n_valid, logit, -jnp.inf)
+
+
+def descend_features(stats: FeatureStats, omega: Array, tau: float,
+                     h: Array, keys: Array, *,
+                     use_kernels: bool | None = None,
+                     dense_cap: int | None = None) -> tuple[Array, Array]:
+    """Level-synchronous batched descent over RFF masses (DESIGN.md §2.6/2.7).
+
+    h:    (T, d) RAW queries (feature projection happens here, leaf scoring
+          stays in the original space).
+    keys: (T, m) PRNG keys, one per draw — the same layout as ``descend``.
+
+    Each level is one (T, D) x (D, nodes) matmul (dense form) or a per-draw
+    gather of child feature sums (deep levels); the within-leaf categorical
+    uses exact exp-kernel scores.  Returns ids: (T, m) int32 and logq:
+    (T, m) exact log sampling probabilities under the hierarchy's
+    distribution.
+    """
+    if use_kernels is None:
+        use_kernels = jax.default_backend() == "tpu"
+    h = jax.lax.stop_gradient(h.astype(jnp.float32))
+    t, m = keys.shape[0], keys.shape[1]
+    depth = stats.depth
+    if dense_cap is None:
+        dense_cap = max(256, 4 * m)
+    phi_h = _query_features(h, omega, tau)  # (T, D)
+    klev = jax.vmap(jax.vmap(lambda k: jax.random.split(k, depth + 1)))(keys)
+
+    idx = jnp.zeros((t, m), jnp.int32)
+    logq = jnp.zeros((t, m), jnp.float32)
+    for lvl in range(1, depth + 1):
+        f = stats.levels_f[lvl]  # (nodes, D)
+        left, right = 2 * idx, 2 * idx + 1
+        if f.shape[0] <= dense_cap:
+            table = phi_h @ f.T  # (T, nodes)
+            mass_l = jnp.take_along_axis(table, left, axis=1)
+            mass_r = jnp.take_along_axis(table, right, axis=1)
+        else:
+            mass_l = jnp.einsum("tmk,tk->tm", f[left], phi_h)
+            mass_r = jnp.einsum("tmk,tk->tm", f[right], phi_h)
+        # Numerical floor: padding-only subtrees have exactly zero mass.
+        p_r = mass_r / jnp.maximum(mass_l + mass_r, 1e-30)
+        go_right = jax.vmap(jax.vmap(jax.random.bernoulli))(
+            klev[:, :, lvl - 1], p_r)
+        idx = jnp.where(go_right, right, left)
+        logq = logq + jnp.log(jnp.where(go_right, p_r, 1.0 - p_r))
+
+    logits = leaf_logits_exp(stats, h, idx, tau, use_kernels)
+    within = jax.vmap(jax.vmap(jax.random.categorical))(
+        klev[:, :, depth], logits)
+    log_within = jnp.take_along_axis(
+        jax.nn.log_softmax(logits, axis=-1), within[..., None], axis=-1
+    )[..., 0]
+    ids = idx * stats.leaf_size + within
+    return ids.astype(jnp.int32), logq + log_within
+
+
+def all_class_logq_features(stats: FeatureStats, omega: Array, tau: float,
+                            h: Array) -> Array:
+    """Exact log-probability the RFF hierarchy assigns to EVERY class.
+
+    The test oracle for the feature-sum sampler: node probabilities from the
+    RFF masses, within-leaf conditional from the exact exp kernel — the same
+    distribution ``descend_features`` draws from.  O(n D) — test use only.
+    h: (d,) one raw query.  Returns (n,) for the static row bound n.
+    """
+    phi_h = _query_features(h[None], omega, tau)[0]  # (D,)
+    level_lm = [
+        jnp.log(jnp.maximum(stats.levels_f[lvl] @ phi_h, 1e-30))
+        for lvl in range(stats.depth + 1)]
+    dots = jnp.einsum("lbr,r->lb", stats.wq, h.astype(jnp.float32))
+    logit = dots / jnp.asarray(tau, jnp.float32)
+    ids = (jnp.arange(stats.num_leaves)[:, None] * stats.leaf_size
+           + jnp.arange(stats.leaf_size)[None, :])
+    logit = jnp.where(ids < stats.n_valid, logit, -jnp.inf)
+    return _all_class_from_levels(level_lm, logit, stats.n)

@@ -34,13 +34,26 @@ class SamplingKernel:
       degree: polynomial degree of f (2 for quadratic, 4 for quartic); used to
         decide whether Gram-matrix summary statistics are exact (degree 2) or
         an upper-level approximation must fall back to exact scoring.
+        0 marks non-polynomial kernels (the exp kernel behind ``rff_kernel``)
+        whose summary statistics live in an explicit random-feature space
+        instead of Gram matrices.
       alpha: scale inside f (kept for reporting; already baked into of_dot).
+      feature_dim: dimension D of the explicit feature space when phi is a
+        random-feature map (None for polynomial kernels, whose D is implied
+        by d and degree).
+      tau: softmax temperature of the exp kernel (1.0 and unused otherwise).
+      phi_fn: explicit feature-map override; when set, ``phi`` dispatches to
+        it (random-feature kernels).  For degree-2 kernels the closed-form
+        map below is used.
     """
 
     name: str
     of_dot: Callable[[Array], Array]
     degree: int
     alpha: float
+    feature_dim: int | None = None
+    tau: float = 1.0
+    phi_fn: Callable[[Array], Array] | None = None
 
     def pair_scores(self, h: Array, w: Array) -> Array:
         """K(h, w_j) for h: (..., d) against w: (n, d) -> (..., n)."""
@@ -48,7 +61,9 @@ class SamplingKernel:
         return self.of_dot(dots)
 
     def phi(self, a: Array) -> Array:
-        """Explicit feature map (test-scale only: D grows as d**degree)."""
+        """Explicit feature map (test-scale only for degree-2: D = d^2+1)."""
+        if self.phi_fn is not None:
+            return self.phi_fn(a)
         if self.degree == 2:
             outer = jnp.einsum("...i,...j->...ij", a, a)
             flat = outer.reshape(*a.shape[:-1], -1)
@@ -123,3 +138,107 @@ def gram_set_mass_batch(kernel: SamplingKernel, z: Array, cnt: Array,
     assert kernel.degree == 2
     frob = jnp.einsum("...ij,ij->...", z, hh)
     return kernel.alpha * frob + total * cnt
+
+
+# --- positive random Fourier features for the exp kernel (DESIGN.md §2.7) ----
+#
+# Rawat et al., "Sampled Softmax with Random Fourier Features" (NeurIPS 2019):
+# the softmax numerator exp(<h, w>/tau) is the expectation of a PRODUCT of
+# positive scalar features over Gaussian directions omega ~ N(0, I_d),
+#
+#   exp(<a, b>/tau) = E_omega[ e^{<omega,a'> - |a'|^2/2} e^{<omega,b'> - |b'|^2/2} ]
+#   with a' = a/sqrt(tau), b' = b/sqrt(tau),
+#
+# so the D-sample Monte-Carlo feature map
+#
+#   phi_k(x) = D^{-1/2} exp( <omega_k, x>/sqrt(tau) - |x|^2/(2 tau) )      (*)
+#
+# is NON-NEGATIVE (unlike trigonometric RFF) and satisfies
+# E[<phi(a), phi(b)>] = exp(<a,b>/tau).  Non-negativity is what makes it a
+# sampling kernel: summary statistics z(C) = sum_j phi(w_j) stay positive, so
+# eq. 9's branch probabilities are well defined.  Everything downstream works
+# in the LOG domain first and exponentiates after subtracting a shift (the
+# per-query max on the h side, a build-time bound on the w side) — shifts
+# scale every node mass by the same constant and cancel in the sampling
+# probabilities, so they are pure numerics, never bias.
+
+
+def rff_directions(key: Array, dim: int, d: int) -> Array:
+    """Gaussian feature directions omega: (D, d), omega_k ~ N(0, I_d)."""
+    return jax.random.normal(key, (dim, d), jnp.float32)
+
+
+def rff_log_phi(x: Array, omega: Array, tau: float) -> Array:
+    """log of the UNNORMALIZED positive features (*) (no D^{-1/2}, no shift).
+
+    x: (..., d); omega: (D, d) -> (..., D) fp32.
+    """
+    x32 = x.astype(jnp.float32)
+    s = jnp.asarray(tau, jnp.float32) ** 0.5
+    proj = jnp.einsum("...d,kd->...k", x32, omega.astype(jnp.float32)) / s
+    nrm = jnp.sum(x32 * x32, axis=-1, keepdims=True) / (2.0 * tau)
+    return proj - nrm
+
+
+def rff_logshift_bound(w: Array, omega: Array, tau: float) -> Array:
+    """Cheap analytic upper bound on max log-feature over rows of w.
+
+    max_{i,k} log phi <= max_i ( g |w_i| / sqrt(tau) - |w_i|^2 / (2 tau) )
+    with g = max_k |omega_k|.  O(n d + D d) — no (n, D) matmul.  Used as the
+    build-time log-domain shift: features become exp(log phi - shift) <= 1,
+    overflow-free, while the worst-case underflow gap (bound minus true max,
+    roughly |w| (sqrt(d) - sqrt(2 ln D)) / sqrt(tau)) stays far inside fp32
+    range at practical scales.
+    """
+    w32 = w.astype(jnp.float32)
+    g = jnp.sqrt(jnp.max(jnp.sum(omega.astype(jnp.float32) ** 2, axis=-1)))
+    nrm = jnp.sqrt(jnp.sum(w32 * w32, axis=-1))
+    s = jnp.asarray(tau, jnp.float32) ** 0.5
+    per_row = g * nrm / s - nrm * nrm / (2.0 * tau)
+    # all-padding tables (empty shards) fall back to shift 0
+    return jnp.max(per_row, initial=0.0)
+
+
+def rff_phi(x: Array, omega: Array, tau: float,
+            logshift: Array | float = 0.0) -> Array:
+    """The positive feature map (*), shifted by ``logshift`` in log domain.
+
+    <phi(a, shift=s), phi(b, shift=s)> estimates exp(<a,b>/tau - 2 s) — any
+    common shift cancels in normalized sampling probabilities.
+    x: (..., d) -> (..., D) fp32 non-negative features.
+    """
+    d_feat = omega.shape[0]
+    lphi = rff_log_phi(x, omega, tau) - logshift
+    return jnp.exp(lphi) / jnp.sqrt(jnp.asarray(d_feat, jnp.float32))
+
+
+def rff_kernel(dim: int = 128, tau: float = 1.0,
+               seed: int = 0) -> SamplingKernel:
+    """Exp kernel K = exp(t / tau) with a D-dim positive RFF feature map.
+
+    ``of_dot`` is the EXACT exp kernel (used for leaf scoring and oracle
+    comparisons); ``phi`` is the Monte-Carlo feature map (*) with directions
+    drawn deterministically from ``seed`` — the sampler family carries its
+    own explicitly-materialized omega (like the JL projection), this kernel
+    object is the self-contained form for tests and oracle sampling.
+    """
+    def of_dot(t: Array) -> Array:
+        return jnp.exp(t / tau)
+
+    omega_by_d: dict[int, Array] = {}  # drawn once per input dim
+
+    def phi_fn(a: Array) -> Array:
+        d = a.shape[-1]
+        if d not in omega_by_d:
+            omega_by_d[d] = rff_directions(jax.random.PRNGKey(seed), dim, d)
+        return rff_phi(a, omega_by_d[d], tau)
+
+    return SamplingKernel(
+        name=f"rff(D={dim},tau={tau:g})",
+        of_dot=of_dot,
+        degree=0,
+        alpha=1.0,
+        feature_dim=dim,
+        tau=tau,
+        phi_fn=phi_fn,
+    )

@@ -18,7 +18,8 @@ through the dense sharded head or the hierarchy-backed top-k MIPS index
 (``serve/engine.py`` / ``serve/retrieval.py``, DESIGN.md §5), which reuses
 the same Gram statistics these samplers maintain.
 
-Distributions (paper §4.1.2 + Fig. 2):
+Distributions (paper §4.1.2 + Fig. 2, plus the RFF family of Rawat et al.
+2019 — DESIGN.md §2.7):
   uniform            q ∝ 1
   unigram            q ∝ class frequency
   bigram             q ∝ P(class | previous class)          (small vocab only)
@@ -29,6 +30,10 @@ Distributions (paper §4.1.2 + Fig. 2):
   tree-quadratic     paper §3.2 divide & conquer, O(D log n)
   block-quadratic    TPU two-level form, optional low-rank projection and
                      batch-shared mode (DESIGN.md §2.2–2.3)
+  rff                q ≈ exp(o / tau) via a D-dim positive random-feature
+                     hierarchy — near-softmax q at O(D log n) per draw
+  rff-oracle         q ∝ <phi(h), phi(w_i)> brute force (the statistical
+                     reference for the rff family)
 """
 from __future__ import annotations
 
@@ -39,8 +44,14 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core import blocks, tree
-from repro.core.kernel_fns import SamplingKernel, quadratic_kernel, quartic_kernel
+from repro.core import blocks, hierarchy, tree
+from repro.core.kernel_fns import (
+    SamplingKernel,
+    quadratic_kernel,
+    quartic_kernel,
+    rff_directions,
+    rff_kernel,
+)
 
 Array = jax.Array
 
@@ -264,6 +275,107 @@ class BlockSampler(Sampler):
         return super().sample_batch(state, h, m, key)
 
 
+@dataclasses.dataclass(frozen=True)
+class FeatureOracleSampler(Sampler):
+    """Brute-force feature-space oracle: q_i ∝ <phi(h), phi(w_i)> computed
+    over ALL classes (O(n D) per query).
+
+    The statistical reference for random-feature samplers: the hierarchical
+    ``RFFSampler`` draws from this SAME marginal up to leaf-level exactness
+    (its within-leaf conditional uses the exact exp kernel, so its q is at
+    least as close to the softmax).  Also the "oracle-q path" of the eq. 5
+    estimator tests."""
+
+    kernel: SamplingKernel = dataclasses.field(default_factory=rff_kernel)
+    name: str = "rff-oracle"
+
+    def init(self, key, w):
+        return {"w": w}
+
+    def refresh(self, state, w):
+        return {"w": w}
+
+    def logq_all(self, state, h):
+        s = self.kernel.phi(state["w"].astype(jnp.float32)) @ self.kernel.phi(
+            h.astype(jnp.float32))
+        if "n_valid" in state:  # mask padding rows of sharded tables
+            ok = jnp.arange(s.shape[0]) < state["n_valid"]
+            s = jnp.where(ok, s, 0.0)
+        return jnp.log(jnp.maximum(s, 1e-30)) - jnp.log(jnp.sum(s))
+
+    def sample(self, state, h, m, key):
+        logq = self.logq_all(state, h)
+        ids = jax.random.categorical(key, logq, shape=(m,)).astype(jnp.int32)
+        return ids, logq[ids]
+
+
+def rff_oracle(dim: int = 512, tau: float = 1.0,
+               seed: int = 0) -> FeatureOracleSampler:
+    return FeatureOracleSampler(kernel=rff_kernel(dim, tau, seed))
+
+
+@dataclasses.dataclass(frozen=True)
+class RFFSampler(Sampler):
+    """Exp-kernel sampling through a positive-RFF feature-sum hierarchy
+    (Rawat et al. 2019 + paper §3.2 structure; DESIGN.md §2.7).
+
+    The divide & conquer tree with z(C) = sum phi(w_j) materialized in the
+    D-dim random-feature space: node masses are one matmul per level, the
+    within-leaf categorical is scored with the EXACT exp kernel, and the
+    reported log-q is exact under the distribution actually sampled — so
+    eq. 2 stays correct under stale features (DESIGN.md §2.4).  A
+    first-class train-island citizen: the train step carries the feature
+    heap exactly like the Gram heap, and ``proj`` carries the fixed
+    direction matrix omega: (D, d) (drawn once at init, the analogue of the
+    JL projection)."""
+
+    dim: int = 128
+    tau: float = 1.0
+    leaf_size: int | None = None
+    name: str = "rff"
+
+    def _leaf(self, w) -> int:
+        if self.leaf_size is not None:
+            return self.leaf_size
+        # Stop splitting once exact leaf scoring costs what a level does.
+        return max(2, min(w.shape[0], w.shape[1]))
+
+    def init(self, key, w):
+        omega = rff_directions(key, self.dim, w.shape[1])
+        return {"stats": hierarchy.build_features(w, self._leaf(w), omega,
+                                                  self.tau),
+                "proj": omega}
+
+    def refresh(self, state, w):
+        return {"stats": hierarchy.build_features(w, self._leaf(w),
+                                                  state["proj"], self.tau),
+                "proj": state["proj"]}
+
+    def update_rows(self, state, ids, w_new):
+        return {"stats": hierarchy.update_feature_rows(
+                    state["stats"], ids, w_new, state["proj"], self.tau),
+                "proj": state["proj"]}
+
+    def all_class_logq(self, state, h):
+        """Exact per-class log q of the hierarchy (test oracle, O(n D))."""
+        return hierarchy.all_class_logq_features(state["stats"],
+                                                 state["proj"], self.tau, h)
+
+    def sample(self, state, h, m, key):
+        keys = jax.random.split(key, m)[None]
+        ids, logq = hierarchy.descend_features(
+            state["stats"], state["proj"], self.tau, h[None], keys)
+        return ids[0], logq[0]
+
+    def sample_batch(self, state, h, m, key):
+        # Natively batched level-synchronous descent; same key-tree contract
+        # as TreeSampler.sample_batch.
+        kt = jax.random.split(key, h.shape[0])
+        keys = jax.vmap(lambda k: jax.random.split(k, m))(kt)
+        return hierarchy.descend_features(state["stats"], state["proj"],
+                                          self.tau, h, keys)
+
+
 _REGISTRY: dict[str, Callable[..., Sampler]] = {
     "uniform": UniformSampler,
     "unigram": UnigramSampler,
@@ -275,6 +387,8 @@ _REGISTRY: dict[str, Callable[..., Sampler]] = {
     "tree-quadratic": TreeSampler,
     "block-quadratic": BlockSampler,
     "block-quadratic-shared": partial(BlockSampler, shared=True),
+    "rff": RFFSampler,
+    "rff-oracle": rff_oracle,
 }
 
 

@@ -8,6 +8,9 @@
                   quadratic-kernel mode (leaf level of the batched descent,
                   DESIGN.md §2.6) and raw-dot mode (exact scoring step of
                   serving beam retrieval, DESIGN.md §5)
+  rff_features  — fused positive-RFF features + per-leaf feature-sum
+                  reduction (stats refresh of the exp-kernel sampler,
+                  DESIGN.md §2.7; the (n, D) feature matrix never hits HBM)
   sampled_loss  — fused corrected sampled-softmax loss: logits + eq. 2
                   correction + online logsumexp, never materializing (T, m)
                   logits in HBM

@@ -16,6 +16,7 @@ import numpy as np
 from repro.kernels.block_scores import block_scores as _block_scores
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.leaf_scores import leaf_scores as _leaf_scores
+from repro.kernels.rff_features import rff_features as _rff_features
 from repro.kernels.sampled_loss import sampled_loss as _sampled_loss
 from repro.kernels.zstats import zstats as _zstats
 
@@ -76,6 +77,28 @@ def leaf_dots(h: Array, rows: Array) -> Array:
     The exact-scoring step of serving-side beam retrieval: same kernel and
     VMEM schedule as ``leaf_scores``, without the kernelization."""
     return _leaf_call(h, rows, alpha=0.0, square=False)
+
+
+def rff_features(w: Array, omega: Array, mask: Array, logshift: Array, *,
+                 tau: float = 1.0) -> Array:
+    """w: (L, B, d); omega: (D, d); mask: (L, B); logshift: () traced scalar
+    -> (L, D) fp32 masked per-leaf positive-RFF feature sums.
+
+    Fuses phi(w) with the per-leaf reduction (DESIGN.md §2.7) — the (n, D)
+    feature matrix never hits HBM.  Padded feature columns (zero omega rows)
+    produce junk that is sliced off; padded leaf rows are masked to zero."""
+    n_feat = omega.shape[0]
+    l_tile = min(8, max(1, 1 << (w.shape[0] - 1).bit_length()))
+    d_tile = min(128, max(8, 1 << (n_feat - 1).bit_length()))
+    wp, n_leaves = _pad_to(w, 0, l_tile)
+    mp, _ = _pad_to(mask, 0, l_tile)
+    op, _ = _pad_to(omega, 0, d_tile)
+    out = _rff_features(wp, op, mp, jnp.reshape(logshift, (1, 1)),
+                        tau=tau, d_total=n_feat,
+                        l_tile=min(l_tile, wp.shape[0]),
+                        d_tile=min(d_tile, op.shape[0]),
+                        interpret=_interpret())
+    return out[:n_leaves, :n_feat]
 
 
 def sampled_loss(h: Array, w_neg: Array, logq: Array, pos_logit: Array,

@@ -34,6 +34,20 @@ def leaf_dots_ref(h: Array, rows: Array) -> Array:
                       h.astype(jnp.float32))
 
 
+def rff_features_ref(w: Array, omega: Array, mask: Array, logshift,
+                     tau: float) -> Array:
+    """w: (L, B, d); omega: (D, d); mask: (L, B) -> (L, D) masked per-leaf
+    sums of the positive RFF features (DESIGN.md §2.7)."""
+    w32 = w.astype(jnp.float32)
+    om = omega.astype(jnp.float32)
+    dots = jnp.einsum("lbd,kd->lbk", w32, om) / jnp.sqrt(
+        jnp.asarray(tau, jnp.float32))
+    nrm = jnp.sum(w32 * w32, axis=-1, keepdims=True) / (2.0 * tau)
+    feats = jnp.exp(dots - nrm - jnp.reshape(logshift, ()))
+    feats = feats / jnp.sqrt(jnp.asarray(omega.shape[0], jnp.float32))
+    return jnp.einsum("lbk,lb->lk", feats, mask.astype(jnp.float32))
+
+
 def sampled_loss_ref(h: Array, w_neg: Array, logq: Array, pos_logit: Array,
                      m_total: int) -> Array:
     """Corrected sampled softmax with shared negatives (paper eq. 2-3).

@@ -1,0 +1,81 @@
+"""Pallas kernel: fused positive-RFF features + per-leaf feature-sum reduction.
+
+The statistics-refresh hot spot of the RFF sampler (DESIGN.md §2.7): build
+the leaf level of the feature-sum hierarchy
+
+    out[l, k] = sum_b mask[l, b] * phi_k(w[l, b])
+    phi_k(x)  = D^{-1/2} exp( <omega_k, x>/sqrt(tau) - |x|^2/(2 tau)
+                              - logshift )
+
+in ONE pass — the (n, D) feature matrix never exists in HBM.  Grid is
+(L tiles x D tiles); each step loads a (Lt, B, d) class tile and a (Dt, d)
+direction tile into VMEM, runs one MXU contraction for the direction
+projections, applies the log-domain shift + exp + padding mask on the VPU,
+and reduces over the leaf axis to the (Lt, Dt) output tile.
+
+``mask`` is REQUIRED: zero padding rows still carry phi = exp(-logshift) > 0
+(unlike the Gram build, where w w^T = 0 masks for free), so validity must be
+explicit.  ``logshift`` is a traced scalar (shape (1, 1)) — the build-time
+log-domain normalization (kernel_fns.rff_logshift_bound) that keeps every
+exp in range; it scales all masses uniformly and cancels in sampling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _rff_features_kernel(inv_sqrt_tau, inv_2tau, inv_sqrt_d, w_ref, om_ref,
+                         mask_ref, shift_ref, out_ref):
+    w = w_ref[...].astype(jnp.float32)          # (Lt, B, d)
+    om = om_ref[...].astype(jnp.float32)        # (Dt, d)
+    mask = mask_ref[...].astype(jnp.float32)    # (Lt, B)
+    shift = shift_ref[0, 0]
+    lt, b, d = w.shape
+    dots = jax.lax.dot_general(
+        w.reshape(lt * b, d), om, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (Lt*B, Dt)
+    nrm = jnp.sum(w * w, axis=-1).reshape(lt * b, 1)
+    lphi = dots * inv_sqrt_tau - nrm * inv_2tau - shift
+    feats = jnp.exp(lphi) * (inv_sqrt_d * mask.reshape(lt * b, 1))
+    out_ref[...] = jnp.sum(feats.reshape(lt, b, -1), axis=1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tau", "d_total", "l_tile", "d_tile",
+                              "interpret"))
+def rff_features(w: Array, omega: Array, mask: Array, logshift: Array, *,
+                 tau: float = 1.0, d_total: int | None = None,
+                 l_tile: int = 8, d_tile: int = 128,
+                 interpret: bool = False) -> Array:
+    """w: (L, B, d); omega: (D, d); mask: (L, B); logshift: (1, 1)
+    -> (L, D) fp32 per-leaf feature sums.
+
+    L must divide by l_tile and D by d_tile (ops.py pads); ``d_total`` is the
+    TRUE feature dim for the D^{-1/2} normalization when D is padded."""
+    n_leaves, b, d = w.shape
+    n_feat = omega.shape[0]
+    assert n_leaves % l_tile == 0 and n_feat % d_tile == 0, (
+        n_leaves, n_feat, l_tile, d_tile)
+    d_total = d_total or n_feat
+    kernel = functools.partial(
+        _rff_features_kernel, float(tau) ** -0.5, 0.5 / float(tau),
+        float(d_total) ** -0.5)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_leaves // l_tile, n_feat // d_tile),
+        in_specs=[
+            pl.BlockSpec((l_tile, b, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((d_tile, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((l_tile, b), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((l_tile, d_tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_leaves, n_feat), jnp.float32),
+        interpret=interpret,
+    )(w, omega, mask, logshift)

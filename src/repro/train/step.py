@@ -30,11 +30,16 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core import blocks, distributed, hierarchy, tree
-from repro.core.kernel_fns import quadratic_kernel, quartic_kernel
+from repro.core.kernel_fns import (
+    quadratic_kernel,
+    quartic_kernel,
+    rff_directions,
+)
 from repro.core.sampled_softmax import sampled_softmax_from_embeddings
 from repro.core.samplers import (
     BlockSampler,
     LogitOracleSampler,
+    RFFSampler,
     Sampler,
     TreeSampler,
     UniformSampler,
@@ -63,6 +68,11 @@ class TrainState:
               (tp * 2*L_l, r, r) / (tp * 2*L_l,)  [hierarchy.to_heap], and
               wq (tp * L_l, leaf, r) the per-shard leaf table — the top
               log2(tp) tree levels ARE the TP axis (DESIGN.md §2.5).
+      rff:    z is the heap-packed per-level FEATURE sums (tp * 2*L_l, D)
+              and cnt the aux heap (counts + per-shard logshift in the pad
+              row) [hierarchy.to_feature_heap]; wq (tp * L_l, leaf, d) holds
+              RAW rows (exact exp-kernel leaf scoring) and ``proj`` carries
+              the fixed direction matrix omega (D, d) (DESIGN.md §2.7).
     """
 
     params: Any
@@ -92,6 +102,12 @@ def sampler_from_cfg(cfg: ArchConfig) -> Sampler:
         )
     if name == "quadratic-oracle":
         return make_sampler(name, alpha=cfg.sampler_alpha)
+    if name == "rff":
+        assert not cfg.sampler_proj_rank, (
+            "sampler='rff' ignores sampler_proj_rank — omega (rff_dim, d) "
+            "IS the projection; set sampler_proj_rank=None")
+        return make_sampler(name, dim=cfg.rff_dim, tau=cfg.rff_tau,
+                            leaf_size=cfg.sampler_block)
     return make_sampler(name)
 
 
@@ -116,6 +132,11 @@ def _tree_dims(cfg: ArchConfig, tp: int) -> tuple[int, int, int, int]:
 def _stat_shapes(cfg: ArchConfig, sampler: Sampler, tp: int
                  ) -> tuple[tuple, tuple, tuple]:
     """Global shapes of the carried (z, cnt, wq) triple (sharded P('model'))."""
+    if isinstance(sampler, RFFSampler):
+        _, num_leaves_l, leaf, d = _tree_dims(cfg, tp)
+        rows = hierarchy.heap_rows(num_leaves_l)
+        return ((tp * rows, cfg.rff_dim), (tp * rows,),
+                (tp * num_leaves_l, leaf, d))
     if isinstance(sampler, TreeSampler):
         _, num_leaves_l, leaf, r = _tree_dims(cfg, tp)
         rows = hierarchy.heap_rows(num_leaves_l)
@@ -128,7 +149,14 @@ def _stat_shapes(cfg: ArchConfig, sampler: Sampler, tp: int
 
 def _build_stat_arrays(sampler: Sampler, cfg: ArchConfig, head_full: Array,
                        n_valid, proj) -> tuple[Array, Array, Array]:
-    """Fresh (z, cnt, wq) carry arrays from the gathered local head shard."""
+    """Fresh (z, cnt, wq) carry arrays from the gathered local head shard.
+
+    For the rff family ``proj`` is the direction matrix omega (D, d)."""
+    if isinstance(sampler, RFFSampler):
+        fs = hierarchy.build_features(head_full, next_pow2(cfg.sampler_block),
+                                      proj, sampler.tau, n_valid=n_valid)
+        f, aux = hierarchy.to_feature_heap(fs)
+        return f, aux, fs.wq
     if isinstance(sampler, TreeSampler):
         hs = hierarchy.build(head_full, next_pow2(cfg.sampler_block),
                              proj=proj, n_valid=n_valid, full_tree=True)
@@ -140,6 +168,8 @@ def _build_stat_arrays(sampler: Sampler, cfg: ArchConfig, head_full: Array,
 
 def _stats_from_arrays(sampler: Sampler, z, cnt, wq, n_valid):
     """Rehydrate the carried (z, cnt, wq) triple into sampler statistics."""
+    if isinstance(sampler, RFFSampler):
+        return hierarchy.from_feature_heap(z, cnt, wq, n_valid)
     if isinstance(sampler, TreeSampler):
         return hierarchy.from_heap(z, cnt, wq, n_valid)
     return blocks.BlockStats(z, cnt, wq, n_valid)
@@ -147,9 +177,9 @@ def _stats_from_arrays(sampler: Sampler, z, cnt, wq, n_valid):
 
 def _local_stats(sampler: Sampler, cfg: ArchConfig, head_full: Array,
                  z, cnt, wq, n_valid, proj, refresh: Array | None):
-    """Local sampler state for the island.  For block/tree samplers, either
-    rebuild from the gathered head or reuse carried stats."""
-    if isinstance(sampler, (BlockSampler, TreeSampler)):
+    """Local sampler state for the island.  For block/tree/rff samplers,
+    either rebuild from the gathered head or reuse carried stats."""
+    if isinstance(sampler, (BlockSampler, TreeSampler, RFFSampler)):
         new = _build_stat_arrays(sampler, cfg, head_full, n_valid, proj)
         if refresh is None or z is None:
             z, cnt, wq = new
@@ -178,7 +208,11 @@ def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
     pure_fsdp = ctx.mode == "pure_fsdp"
     v_l, n_blocks_l, r = _sampler_dims(cfg, tp)
 
-    carries_stats = isinstance(sampler, (BlockSampler, TreeSampler))
+    carries_stats = isinstance(sampler, (BlockSampler, TreeSampler,
+                                         RFFSampler))
+    # rff always rides a projection-shaped carry: omega (D, d) in state.proj.
+    carries_proj = bool(cfg.sampler_proj_rank) or isinstance(sampler,
+                                                             RFFSampler)
     mdl = ctx.model_axis
 
     # --- stats refresh (no gradients; runs once per step, before the
@@ -188,7 +222,7 @@ def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
             lambda a_, b_: jnp.where(refresh, a_, b_), new, keep)
 
     def refresh_island(head, z, cnt, wq, proj, refresh):
-        proj_l = proj if cfg.sampler_proj_rank else None
+        proj_l = proj if carries_proj else None
         my = lax.axis_index(mdl)
         head_full = head  # gather the Fd-sharded feature dim
         for a in ctx.data_axes[::-1]:
@@ -203,7 +237,7 @@ def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
         head = lax.stop_gradient(head)
         if mesh is None:
             n_valid = jnp.asarray(cfg.vocab_size, jnp.int32)
-            proj_l = proj if cfg.sampler_proj_rank else None
+            proj_l = proj if carries_proj else None
             new = _build_stat_arrays(sampler, cfg, head, n_valid, proj_l)
             return _merge_refresh(new, (z, cnt, wq), refresh)
         pj = proj if proj is not None else jnp.zeros((), jnp.float32)
@@ -218,7 +252,7 @@ def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
         """Runs per-(data,model) shard.  head: (v_l, d_l) local;
         h2d: (T_l, d); labels: (T_l,).  Returns the GLOBAL loss sum (scalar,
         replicated) — tokens x vocab both stay sharded end to end."""
-        proj_l = proj if cfg.sampler_proj_rank else None
+        proj_l = proj if carries_proj else None
         my = lax.axis_index(mdl)
         head_full = head
         for a in ctx.data_axes[::-1]:
@@ -257,7 +291,7 @@ def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
         """Returns the global loss SUM over all tokens."""
         if mesh is None:
             n_valid = jnp.asarray(cfg.vocab_size, jnp.int32)
-            proj_l = proj if cfg.sampler_proj_rank else None
+            proj_l = proj if carries_proj else None
             if carries_stats:
                 state_local = {
                     "stats": _stats_from_arrays(sampler, z, cnt, wq, n_valid),
@@ -388,8 +422,13 @@ def init_train_state(key, cfg: ArchConfig, ctx: ShardCtx,
     if cfg.sampler_proj_rank:
         proj = blocks.make_projection(jax.random.fold_in(key, 7),
                                       head.shape[1], cfg.sampler_proj_rank)
+    if isinstance(sampler, RFFSampler):
+        # omega plays the projection role: fixed Gaussian directions, drawn
+        # once, replicated, carried for the lifetime of the run.
+        proj = rff_directions(jax.random.fold_in(key, 7), cfg.rff_dim,
+                              head.shape[1])
     z = cnt = wq = None
-    if isinstance(sampler, (BlockSampler, TreeSampler)):
+    if isinstance(sampler, (BlockSampler, TreeSampler, RFFSampler)):
         if ctx.mesh is None:
             z, cnt, wq = _build_stat_arrays(
                 sampler, cfg, head,
@@ -431,7 +470,7 @@ def abstract_train_state(cfg: ArchConfig, ctx: ShardCtx,
 
     d_h = api.hidden_width(cfg)
     z = cnt = wq = None
-    if isinstance(sampler, (BlockSampler, TreeSampler)):
+    if isinstance(sampler, (BlockSampler, TreeSampler, RFFSampler)):
         (sz, sc, sw) = _stat_shapes(cfg, sampler, ctx.tp)
         mspec = _spec_to_sharding(ctx, P(ctx.model_axis))
         z = jax.ShapeDtypeStruct(sz, jnp.float32, sharding=mspec)
@@ -441,6 +480,9 @@ def abstract_train_state(cfg: ArchConfig, ctx: ShardCtx,
     if cfg.sampler_proj_rank:
         proj = jax.ShapeDtypeStruct((cfg.sampler_proj_rank, d_h),
                                     jnp.float32,
+                                    sharding=_spec_to_sharding(ctx, P()))
+    if isinstance(sampler, RFFSampler):
+        proj = jax.ShapeDtypeStruct((cfg.rff_dim, d_h), jnp.float32,
                                     sharding=_spec_to_sharding(ctx, P()))
     step = jax.ShapeDtypeStruct((), jnp.int32,
                                 sharding=_spec_to_sharding(ctx, P()))

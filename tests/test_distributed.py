@@ -58,6 +58,15 @@ def test_tree_sampler_sharded_train():
 
 
 @pytest.mark.slow
+def test_rff_sampler_sharded_train():
+    """RFFSampler through the distributed train step: feature-sum heap
+    sharded P('model'), omega replicated in state.proj, level-synchronous
+    descent over RFF masses in the island (DESIGN.md §2.7)."""
+    out = _run("check_rff_train.py")
+    assert "RFF TRAIN CHECKS PASSED" in out
+
+
+@pytest.mark.slow
 def test_decode_topk_sharded():
     """Hierarchy-backed top-k decode on a 2x4 mesh: P('model') index layout,
     per-shard beam + cross-shard merge == dense sharded top-k at full beam,

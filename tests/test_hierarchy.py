@@ -146,3 +146,76 @@ def test_projected_batched_descent_self_consistent():
         np.testing.assert_allclose(np.asarray(logq[t]),
                                    all_lq[np.asarray(ids[t])],
                                    rtol=1e-4, atol=1e-4)
+
+
+# --- feature-sum (RFF) hierarchy (DESIGN.md §2.7) ----------------------------
+
+
+def test_feature_heap_roundtrip_and_update():
+    """to_feature_heap/from_feature_heap invert exactly (including the
+    logshift carried in the aux pad row) and the sparse path update matches
+    a full rebuild up to the rebuild's re-derived shift."""
+    from repro.core.kernel_fns import rff_directions
+    n, d, tau = 50, 12, 1.5
+    w = jax.random.normal(jax.random.PRNGKey(3), (n, d)) * 0.5
+    omega = rff_directions(jax.random.PRNGKey(1), 64, d)
+    fs = hierarchy.build_features(w, 8, omega, tau, use_kernels=False)
+    f_heap, aux = hierarchy.to_feature_heap(fs)
+    back = hierarchy.from_feature_heap(f_heap, aux, fs.wq, fs.n_valid, fs.n)
+    assert float(back.logshift) == float(fs.logshift)
+    for a, b in zip(back.levels_f, fs.levels_f):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # counts ride in the aux heap: root count == n
+    assert float(aux[0]) == float(n)
+
+    ids = jnp.asarray([3, 17, 44])
+    w_new = jax.random.normal(jax.random.PRNGKey(8), (3, d))
+    upd = hierarchy.update_feature_rows(fs, ids, w_new, omega, tau)
+    w2 = np.array(w)
+    w2[np.array(ids)] = np.array(w_new)
+    ref = hierarchy.build_features(jnp.asarray(w2), 8, omega, tau,
+                                   use_kernels=False)
+    scale = float(jnp.exp(ref.logshift - upd.logshift))
+    for a, b in zip(upd.levels_f, ref.levels_f):
+        np.testing.assert_allclose(np.asarray(a) / scale, np.asarray(b),
+                                   rtol=2e-4, atol=1e-7)
+
+
+def test_feature_descent_logq_matches_oracle_and_masks_padding():
+    """descend_features reports the exact log-q of its own distribution
+    (all_class_logq_features at the drawn ids) and classes at/after
+    n_valid are never drawn and carry exactly zero probability."""
+    from repro.core.kernel_fns import rff_directions
+    n, n_valid, d, m = 40, 33, 10, 4000
+    w = jax.random.normal(jax.random.PRNGKey(5), (n, d)) * 0.5
+    omega = rff_directions(jax.random.PRNGKey(6), 96, d)
+    fs = hierarchy.build_features(w, 8, omega, 1.0, n_valid=n_valid,
+                                  use_kernels=False)
+    hs = jax.random.normal(jax.random.PRNGKey(7), (2, d))
+    keys = jax.vmap(lambda k: jax.random.split(k, m))(
+        jax.random.split(jax.random.PRNGKey(8), 2))
+    ids, logq = hierarchy.descend_features(fs, omega, 1.0, hs, keys,
+                                           use_kernels=False)
+    assert int(jnp.max(ids)) < n_valid
+    for t in range(2):
+        oracle = np.asarray(hierarchy.all_class_logq_features(
+            fs, omega, 1.0, hs[t]))
+        assert np.exp(oracle)[n_valid:].max() == 0.0
+        np.testing.assert_allclose(np.exp(oracle).sum(), 1.0, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(logq[t]),
+                                   oracle[np.asarray(ids[t])],
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_feature_build_pallas_path_matches_jnp():
+    """The fused rff_features kernel path and the plain-jnp path build the
+    same statistics (interpret mode off-TPU)."""
+    from repro.core.kernel_fns import rff_directions
+    n, d = 70, 16
+    w = jax.random.normal(jax.random.PRNGKey(9), (n, d)) * 0.4
+    omega = rff_directions(jax.random.PRNGKey(10), 80, d)
+    a = hierarchy.build_features(w, 16, omega, 2.0, use_kernels=False)
+    b = hierarchy.build_features(w, 16, omega, 2.0, use_kernels=True)
+    for x, y in zip(a.levels_f, b.levels_f):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=2e-5, atol=1e-7)

@@ -11,6 +11,11 @@ from repro.core.kernel_fns import (
     gram_stats,
     quadratic_kernel,
     quartic_kernel,
+    rff_directions,
+    rff_kernel,
+    rff_log_phi,
+    rff_logshift_bound,
+    rff_phi,
 )
 
 
@@ -57,3 +62,58 @@ def test_kernels_nonnegative():
     t = jnp.linspace(-50, 50, 101)
     assert (quadratic_kernel(100.0).of_dot(t) >= 1.0).all()
     assert (quartic_kernel(1.0).of_dot(t) >= 1.0).all()
+    assert (rff_kernel(tau=2.0).of_dot(t) > 0.0).all()
+
+
+# --- positive RFF feature map (DESIGN.md §2.7) -------------------------------
+
+
+@pytest.mark.parametrize("tau", [1.0, 2.0])
+def test_rff_phi_estimates_exp_kernel(tau):
+    """E[<phi(a), phi(b)>] = exp(<a, b>/tau) — the defining Monte-Carlo
+    property of the positive feature map, at a D large enough that relative
+    error is a few percent for moderate norms."""
+    d, dim = 8, 40000
+    a = jax.random.normal(jax.random.PRNGKey(0), (4, d)) * 0.4
+    b = jax.random.normal(jax.random.PRNGKey(1), (4, d)) * 0.4
+    omega = rff_directions(jax.random.PRNGKey(2), dim, d)
+    est = jnp.sum(rff_phi(a, omega, tau) * rff_phi(b, omega, tau), axis=-1)
+    true = jnp.exp(jnp.sum(a * b, axis=-1) / tau)
+    np.testing.assert_allclose(np.asarray(est), np.asarray(true), rtol=0.2)
+
+
+def test_rff_phi_positive_and_shift_invariant():
+    """Features are strictly positive (what makes them a sampling kernel)
+    and a common log-domain shift cancels in normalized masses."""
+    d, dim = 6, 64
+    x = jax.random.normal(jax.random.PRNGKey(3), (10, d))
+    h = jax.random.normal(jax.random.PRNGKey(4), (d,))
+    omega = rff_directions(jax.random.PRNGKey(5), dim, d)
+    p0 = rff_phi(x, omega, 1.0)
+    assert (np.asarray(p0) > 0).all()
+    mass0 = p0 @ rff_phi(h, omega, 1.0)
+    p1 = rff_phi(x, omega, 1.0, logshift=3.7)
+    mass1 = p1 @ rff_phi(h, omega, 1.0)
+    np.testing.assert_allclose(np.asarray(mass0 / mass0.sum()),
+                               np.asarray(mass1 / mass1.sum()), rtol=1e-5)
+
+
+def test_rff_logshift_bound_dominates():
+    """The analytic build-time shift upper-bounds every log feature, so
+    shifted features never overflow (exp argument <= 0)."""
+    d, dim = 12, 256
+    w = jax.random.normal(jax.random.PRNGKey(6), (100, d)) * 2.0
+    omega = rff_directions(jax.random.PRNGKey(7), dim, d)
+    for tau in (0.5, 1.0, 4.0):
+        bound = float(rff_logshift_bound(w, omega, tau))
+        actual = float(jnp.max(rff_log_phi(w, omega, tau)))
+        assert bound >= actual, (bound, actual)
+
+
+def test_rff_kernel_object():
+    k = rff_kernel(dim=32, tau=1.5, seed=1)
+    assert k.degree == 0 and k.feature_dim == 32 and k.tau == 1.5
+    a = jax.random.normal(jax.random.PRNGKey(8), (3, 10))
+    assert k.phi(a).shape == (3, 32)
+    np.testing.assert_allclose(np.asarray(k.of_dot(jnp.asarray(1.5))),
+                               np.exp(1.0), rtol=1e-6)

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 
@@ -63,6 +64,70 @@ def test_sampled_loss(t, d, m, dtype):
     want = ref.sampled_loss_ref(h, wn, logq, pos, m)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("l,b,d,feat", [(4, 16, 12, 96), (5, 8, 8, 100),
+                                        (1, 32, 16, 128), (9, 4, 24, 40)])
+def test_rff_features(l, b, d, feat, dtype):
+    """Fused phi(w) + per-leaf reduction vs the jnp oracle, with a ragged
+    validity mask and a nonzero log-domain shift."""
+    w = (jax.random.normal(jax.random.PRNGKey(l), (l, b, d)) * 0.4
+         ).astype(dtype)
+    omega = jax.random.normal(jax.random.PRNGKey(feat), (feat, d))
+    mask = (jax.random.uniform(jax.random.PRNGKey(b), (l, b)) > 0.25
+            ).astype(jnp.float32)
+    shift = jnp.asarray(0.9)
+    got = ops.rff_features(w, omega, mask, shift, tau=1.5)
+    want = ref.rff_features_ref(w, omega, mask, shift, 1.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=4e-2 if dtype == jnp.bfloat16 else 3e-4,
+                               atol=1e-4)
+
+
+# --- property-based shape/dtype coverage (hypothesis when installed, fixed
+# bounds + midpoints through the shim otherwise) ------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 197), st.integers(1, 300), st.integers(4, 48),
+       st.booleans())
+def test_sampled_loss_property(t, m, d, bf16):
+    """Uneven T/m tile edges (prime-ish sizes), m far from the 128 block,
+    single-row batches, and bf16 inputs all reduce to the oracle."""
+    dtype = jnp.bfloat16 if bf16 else jnp.float32
+    h = (jax.random.normal(jax.random.PRNGKey(t), (t, d)) * 0.3).astype(dtype)
+    wn = (jax.random.normal(jax.random.PRNGKey(m + 1), (m, d)) * 0.3
+          ).astype(dtype)
+    logq = jax.nn.log_softmax(
+        jax.random.normal(jax.random.PRNGKey(d + 2), (m,)))
+    pos = jax.random.normal(jax.random.PRNGKey(7), (t,))
+    got = ops.sampled_loss(h, wn, logq, pos, m_total=m)
+    assert got.shape == (t,) and got.dtype == jnp.float32
+    want = ref.sampled_loss_ref(h, wn, logq, pos, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **_tol(dtype))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 197), st.integers(1, 63), st.integers(4, 48),
+       st.booleans())
+def test_leaf_scores_property(g, b, r, bf16):
+    """Both modes of the leaf kernel (quadratic scores and raw dots) across
+    ragged draw counts, odd leaf widths, single rows, and bf16."""
+    dtype = jnp.bfloat16 if bf16 else jnp.float32
+    h = (jax.random.normal(jax.random.PRNGKey(g), (g, r)) * 0.5).astype(dtype)
+    rows = (jax.random.normal(jax.random.PRNGKey(b + 1), (g, b, r)) * 0.5
+            ).astype(dtype)
+    got = ops.leaf_scores(h, rows, alpha=100.0)
+    assert got.shape == (g, b) and got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.leaf_scores_ref(h, rows, 100.0)),
+                               rtol=4e-2 if bf16 else 3e-4, atol=2e-2)
+    dots = ops.leaf_dots(h, rows)
+    np.testing.assert_allclose(np.asarray(dots),
+                               np.asarray(ref.leaf_dots_ref(h, rows)),
+                               rtol=4e-2 if bf16 else 3e-4, atol=2e-2)
 
 
 @pytest.mark.parametrize("dtype", DTYPES)

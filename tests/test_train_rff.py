@@ -1,0 +1,68 @@
+"""RFFSampler as a first-class citizen of the training system: the feature
+heap carried in TrainState, omega carried in state.proj, refresh cadence,
+and end-to-end learning through make_train_step (mesh=None; the sharded
+variant lives in tests/dist_scripts/check_rff_train.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import batch_iterator_for
+from repro.optim import make_optimizer
+from repro.sharding.rules import local_ctx
+from repro.train.step import init_train_state, make_train_step
+
+CTX = local_ctx()
+
+
+def _cfg(**over):
+    base = dict(vocab_size=256, m_negatives=32, sampler="rff",
+                sampler_block=16, rff_dim=64, tower_dims=(64, 32),
+                user_feature_dim=64, history_len=3)
+    base.update(over)
+    return get_config("youtube-dnn").reduced(**base)
+
+
+def test_rff_sampler_trains_end_to_end():
+    cfg = _cfg()
+    opt = make_optimizer("adamw", 1e-2, weight_decay=0.0)
+    data = batch_iterator_for(cfg, CTX, global_batch=64, seq_len=0, seed=0)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, CTX, opt, max_len=8)
+    # Feature stats are carried heap-packed: 2L rows of (D,) for L leaves;
+    # omega (D, d) rides in state.proj.
+    assert state.sampler_z.shape[0] == 2 * state.sampler_wq.shape[0]
+    assert state.sampler_z.shape[1] == cfg.rff_dim
+    assert state.proj.shape == (cfg.rff_dim, state.sampler_wq.shape[2])
+    step = jax.jit(make_train_step(cfg, CTX, opt))
+    losses = []
+    for i in range(60):
+        state, metrics = step(state, next(data),
+                              jax.random.fold_in(jax.random.PRNGKey(99), i))
+        losses.append(float(metrics["loss"]))
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.1, (
+        np.mean(losses[:10]), np.mean(losses[-10:]))
+
+
+def test_rff_refresh_cadence_carries_stats():
+    """With refresh_every=3 the carried feature heap stays fixed between
+    refreshes (stale q is still exactly corrected — the aux heap keeps the
+    matching logshift) and changes on refresh steps; omega never changes."""
+    cfg = _cfg(sampler_refresh_every=3)
+    opt = make_optimizer("adamw", 1e-2, weight_decay=0.0)
+    data = batch_iterator_for(cfg, CTX, global_batch=32, seq_len=0, seed=1)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, CTX, opt, max_len=8)
+    omega0 = np.asarray(state.proj)
+    step = jax.jit(make_train_step(cfg, CTX, opt))
+    heaps = []
+    for i in range(4):
+        state, _ = step(state, next(data),
+                        jax.random.fold_in(jax.random.PRNGKey(5), i))
+        heaps.append(np.asarray(state.sampler_z))
+    # step 0 refreshes (step % 3 == 0); steps 1, 2 carry; step 3 refreshes.
+    np.testing.assert_array_equal(heaps[0], heaps[1])
+    np.testing.assert_array_equal(heaps[1], heaps[2])
+    assert np.abs(heaps[3] - heaps[2]).max() > 0
+    np.testing.assert_array_equal(omega0, np.asarray(state.proj))
+    # Feature sums are non-negative by construction (positive features).
+    assert heaps[3].min() >= 0.0
