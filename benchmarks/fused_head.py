@@ -1,0 +1,99 @@
+"""Fused sampled-softmax head vs the einsum path (DESIGN.md §4).
+
+Walltime (forward loss and full (dL/dw, dL/dh) gradient) plus an analytic
+peak-memory proxy across a T x m x d grid at serving-scale vocab, fp32 and
+bf16.  The proxy counts the largest loss-path intermediate each path
+materializes in HBM:
+
+    einsum: the (T, m, d) gathered negative-embedding tensor;
+    fused:  the (chunk, 1+m, d) per-chunk gather of the off-TPU fallback
+            (on TPU the Pallas kernel streams rows through VMEM and the
+            proxy is the (n, d) backward dL/dw accumulator).
+
+On CPU both paths run real XLA code (the fused op dispatches to its chunked
+implementation), so the timing comparison is meaningful here — unlike the
+interpret-mode Pallas columns of kernel_bench.py.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, time_fn
+from repro.core.sampled_softmax import sampled_softmax_from_embeddings
+from repro.kernels import ops
+
+DEFAULT_SHAPES = ((256, 256, 64), (256, 1024, 64), (512, 512, 128))
+
+
+def _peak_proxy(t, m, d, n, itemsize, fused: bool, grad: bool) -> int:
+    if fused:
+        chunk = min(ops.FUSED_HEAD_CHUNK, t)
+        gather = chunk * (1 + m) * d * 4
+        # the (n, d) dL/dw accumulator exists in the backward only
+        return max(gather, n * d * 4) if grad else gather
+    return t * m * d * max(itemsize, 4)  # einsum gathers then upcasts
+
+
+def run(shapes=DEFAULT_SHAPES, n: int = 4096, dtypes=("float32", "bfloat16"),
+        quiet: bool = False, iters: int = 5):
+    rows = []
+    for (t, m, d) in shapes:
+        for dtype_name in dtypes:
+            dt = jnp.dtype(dtype_name)
+            key = jax.random.PRNGKey(0)
+            w = (jax.random.normal(key, (n, d)) * 0.3).astype(dt)
+            h = (jax.random.normal(jax.random.fold_in(key, 1), (t, d)) * 0.3
+                 ).astype(dt)
+            labels = jax.random.randint(jax.random.fold_in(key, 2), (t,),
+                                        0, n)
+            ids = jax.random.randint(jax.random.fold_in(key, 3), (t, m),
+                                     0, n)
+            logq = jnp.full((t, m), -float(np.log(n)))
+
+            def loss_fn(impl):
+                return jax.jit(lambda w_, h_: jnp.sum(
+                    sampled_softmax_from_embeddings(
+                        w_, h_, labels, ids, logq, impl=impl)))
+
+            def grad_fn(impl):
+                return jax.jit(jax.grad(
+                    lambda w_, h_: jnp.sum(sampled_softmax_from_embeddings(
+                        w_, h_, labels, ids, logq, impl=impl)),
+                    argnums=(0, 1)))
+
+            for tag, make in (("fwd", loss_fn), ("grad", grad_fn)):
+                us_e = time_fn(make("einsum"), w, h, iters=iters)
+                us_f = time_fn(make("auto"), w, h, iters=iters)
+                grad = tag == "grad"
+                pe = _peak_proxy(t, m, d, n, dt.itemsize, fused=False,
+                                 grad=grad)
+                pf = _peak_proxy(t, m, d, n, dt.itemsize, fused=True,
+                                 grad=grad)
+                rows.append(csv_row(
+                    f"fused_head/{tag}/T{t}xm{m}xd{d}/{dtype_name}", us_f,
+                    f"einsum_us={us_e:.1f} speedup={us_e / us_f:.2f}x "
+                    f"peak_fused={pf} peak_einsum={pe} "
+                    f"mem_ratio={pe / pf:.1f}x"))
+    if not quiet:
+        for r in rows:
+            print(r, flush=True)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="wider grid (adds T=1024 and d=256 cells)")
+    args = ap.parse_args()
+    shapes = DEFAULT_SHAPES
+    if args.full:
+        shapes = shapes + ((1024, 512, 128), (512, 512, 256))
+    run(shapes=shapes)
+
+
+if __name__ == "__main__":
+    main()

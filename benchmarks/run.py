@@ -47,6 +47,7 @@ def emit_bench_json(name: str, rows, out_dir: str, t0: float) -> None:
         "wall_s": round(time.time() - t0, 3),
         "rows": _normalize_rows(rows),
     }
+    os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
@@ -58,21 +59,29 @@ def main() -> None:
     ap.add_argument("--out-dir", default=os.path.dirname(
         os.path.dirname(os.path.abspath(__file__))),
         help="where BENCH_<name>.json files land (default: repo root)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / few steps: exercises every section "
+                    "and emits schema-complete BENCH_*.json in ~a minute "
+                    "(CI job; numbers are not meaningful)")
     args = ap.parse_args()
     out_dir = args.out_dir
+    smoke = args.smoke
 
     t_all = time.time()
     t0 = time.time()
     print("# sampler_cost (paper §3.2 runtime) — name,us_per_call,derived")
     from benchmarks import sampler_cost
-    emit_bench_json("sampler_cost", sampler_cost.run(ns=(4096, 16384)),
+    emit_bench_json("sampler_cost",
+                    sampler_cost.run(ns=(512,) if smoke else (4096, 16384)),
                     out_dir, t0)
 
     t0 = time.time()
     print("\n# decode_topk (serving MIPS, DESIGN.md §5) — "
           "name,us_per_call,derived")
     from benchmarks import decode_topk
-    emit_bench_json("decode_topk", decode_topk.run(ns=(4096,)), out_dir, t0)
+    emit_bench_json("decode_topk",
+                    decode_topk.run(ns=(512,) if smoke else (4096,)),
+                    out_dir, t0)
 
     t0 = time.time()
     print("\n# kernel_bench — name,us_per_call,derived")
@@ -80,25 +89,39 @@ def main() -> None:
     emit_bench_json("kernel_bench", kernel_bench.run(), out_dir, t0)
 
     t0 = time.time()
+    print("\n# fused_head (fused vs einsum loss path, DESIGN.md §4) — "
+          "name,us_per_call,derived")
+    from benchmarks import fused_head
+    emit_bench_json(
+        "fused_head",
+        fused_head.run(shapes=((32, 16, 16),), n=256, iters=2) if smoke
+        else fused_head.run(),
+        out_dir, t0)
+
+    t0 = time.time()
     print("\n# grad_bias (eq. 5 estimator bias per family x m; "
           "rff < quadratic at equal m)")
     from benchmarks import bias_vs_samples
-    emit_bench_json("grad_bias", bias_vs_samples.grad_bias(reps=5000),
+    emit_bench_json("grad_bias",
+                    bias_vs_samples.grad_bias(reps=200 if smoke else 5000),
                     out_dir, t0)
 
     t0 = time.time()
     print("\n# bias_vs_samples (paper Fig. 2, quick mode)")
     emit_bench_json(
         "bias_vs_samples",
-        bias_vs_samples.run(ms=(4, 32), steps=150,
-                            samplers=["uniform", "softmax",
-                                      "block-quadratic", "rff"]),
+        bias_vs_samples.run(ms=(4,) if smoke else (4, 32),
+                            steps=10 if smoke else 150,
+                            samplers=["uniform", "softmax"] if smoke
+                            else ["uniform", "softmax",
+                                  "block-quadratic", "rff"]),
         out_dir, t0)
 
     t0 = time.time()
     print("\n# convergence_speed (paper Fig. 3, quick mode)")
     from benchmarks import convergence_speed
-    emit_bench_json("convergence_speed", convergence_speed.run(steps=150),
+    emit_bench_json("convergence_speed",
+                    convergence_speed.run(steps=10 if smoke else 150),
                     out_dir, t0)
 
     t0 = time.time()

@@ -1,0 +1,111 @@
+"""Validate every BENCH_*.json against the documented schema (v1).
+
+Usage:  python scripts/check_bench_schema.py [dir]
+
+Checks each file in ``dir`` (default: repo root) against the schema in
+benchmarks/README.md: the shared top-level envelope, then the per-family
+row shape keyed on the ``benchmark`` name.  Exits nonzero on any violation
+so the CI benchmark-smoke job actually gates the perf-trajectory format —
+an emitted file with a drifted schema is a silently broken trajectory.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import numbers
+import os
+import sys
+
+TOP_KEYS = {
+    "schema_version": numbers.Integral,
+    "benchmark": str,
+    "created_unix": numbers.Integral,
+    "backend": str,
+    "device_count": numbers.Integral,
+    "wall_s": numbers.Real,
+    "rows": list,
+}
+
+TIMING = {"name": str, "us_per_call": numbers.Real, "derived": str}
+ROW_SCHEMAS = {
+    "sampler_cost": TIMING,
+    "decode_topk": TIMING,
+    "kernel_bench": TIMING,
+    "fused_head": TIMING,
+    "bias_vs_samples": {"sampler": str, "m": numbers.Integral,
+                        "final_loss": numbers.Real},
+    "grad_bias": {"sampler": str, "m": numbers.Integral,
+                  "bias_linf": numbers.Real, "bias_l2": numbers.Real},
+    "convergence_speed": {"name": str, "curve": list},
+    "roofline": None,  # free-form analysis dict per row
+}
+
+
+def check_file(path: str) -> list[str]:
+    errors = []
+    with open(path) as f:
+        payload = json.load(f)
+    for key, typ in TOP_KEYS.items():
+        if key not in payload:
+            errors.append(f"missing top-level key {key!r}")
+        elif not isinstance(payload[key], typ):
+            errors.append(f"top-level {key!r} is {type(payload[key]).__name__},"
+                          f" wanted {typ.__name__}")
+    if errors:
+        return errors
+    if payload["schema_version"] != 1:
+        errors.append(f"schema_version {payload['schema_version']} != 1")
+    name = payload["benchmark"]
+    expect = os.path.basename(path)
+    if expect != f"BENCH_{name}.json":
+        errors.append(f"benchmark {name!r} does not match filename {expect!r}")
+    if name not in ROW_SCHEMAS:
+        errors.append(f"unknown benchmark family {name!r} — document it in "
+                      "benchmarks/README.md and add it here")
+        return errors
+    if not payload["rows"]:
+        errors.append("rows is empty")
+    row_schema = ROW_SCHEMAS[name]
+    for i, row in enumerate(payload["rows"]):
+        if not isinstance(row, dict):
+            errors.append(f"rows[{i}] is not an object")
+            continue
+        if row_schema is None:
+            continue
+        for key, typ in row_schema.items():
+            if key not in row:
+                errors.append(f"rows[{i}] missing {key!r}")
+            elif not isinstance(row[key], typ):
+                errors.append(f"rows[{i}][{key!r}] is "
+                              f"{type(row[key]).__name__}, wanted "
+                              f"{typ.__name__}")
+        if name == "convergence_speed":
+            for pt in row.get("curve", []):
+                if (not isinstance(pt, list) or len(pt) != 2
+                        or not all(isinstance(v, numbers.Real) for v in pt)):
+                    errors.append(f"rows[{i}] curve point {pt!r} is not "
+                                  "[step, loss]")
+                    break
+    return errors
+
+
+def main() -> int:
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))
+    paths = sorted(glob.glob(os.path.join(out_dir, "BENCH_*.json")))
+    if not paths:
+        print(f"no BENCH_*.json under {out_dir}", file=sys.stderr)
+        return 1
+    failed = False
+    for path in paths:
+        errors = check_file(path)
+        status = "OK" if not errors else "FAIL"
+        print(f"{status:4s} {os.path.basename(path)}")
+        for e in errors:
+            print(f"     - {e}")
+        failed = failed or bool(errors)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

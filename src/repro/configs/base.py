@@ -93,6 +93,10 @@ class ArchConfig:
     # rff ignores sampler_proj_rank — omega: (D, d) IS its projection.
     rff_dim: int = 128
     rff_tau: float = 1.0
+    # loss-head implementation (DESIGN.md §4): "auto" routes per-example
+    # negatives through the fused Pallas head (chunked fallback off-TPU);
+    # "einsum" keeps the dense oracle path; "pallas"/"chunked" force a path.
+    head_impl: str = "auto"
 
     # parallelism (DESIGN.md §7 + EXPERIMENTS.md §Perf)
     train_sharding: str = "tp_fsdp"  # tp_fsdp | pure_fsdp | tp

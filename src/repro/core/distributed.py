@@ -24,6 +24,7 @@ from jax import lax
 
 from repro.core.sampled_softmax import transform_logits
 from repro.core.samplers import Sampler
+from repro.kernels import ops
 
 Array = jax.Array
 
@@ -68,21 +69,52 @@ def _positive_logit(w_local: Array, h: Array, labels: Array, axis_name: str,
 def sharded_sampled_softmax_loss(
     w_local: Array, h: Array, labels: Array, sampler: Sampler,
     state_local: Any, m: int, key: Array, *, axis_name: str,
-    abs_mode: bool = False, bias_local: Array | None = None) -> Array:
+    abs_mode: bool = False, bias_local: Array | None = None,
+    mask_accidental_hits: bool = True, impl: str = "auto") -> Array:
     """Sampled softmax over a vocab-sharded head, negatives sampled in place.
 
     w_local: (n/tp, d) local head shard.  h: (T, d) hidden states (replicated
     across the TP axis).  labels: (T,) GLOBAL class ids.  m: total negatives
     across shards (must divide by tp).  Returns per-example loss (T,).
 
+    A negative that collided with the example's label (possible on exactly
+    the shard owning the label row) is masked to zero mass after the eq. 2
+    correction unless ``mask_accidental_hits=False`` (see
+    core/sampled_softmax.py's module docstring for why).  Per-example
+    negatives route the local corrected logsumexp through the fused head
+    kernel (``kernels.ops.fused_head_lse`` — no (T, m/tp, d) gather in HBM)
+    unless ``impl="einsum"``; the global combine is unchanged.
+
     No tensor of size (T, n) is ever materialized; cross-shard communication
     is two psums of (T,)-vectors and one pmax.
     """
     h32 = h.astype(jnp.float32)
-    tp_static = None  # resolved inside by psum(1)
 
     neg_ids, logq = sharded_negative_sample(sampler, state_local, h, m, key,
                                             axis_name)
+    pos = transform_logits(
+        _positive_logit(w_local, h, labels, axis_name, bias_local), abs_mode)
+    # local ids collide with the label iff label - shard offset matches.
+    labels_local = labels - local_vocab_offset(w_local.shape[0], axis_name)
+    log_m = jnp.log(jnp.asarray(m, jnp.float32))
+
+    if neg_ids.ndim == 2 and impl != "einsum":
+        # eq. 2 with stratified correction: E[count] = m_local*q_local = m*q~.
+        corr = (logq + log_m).astype(jnp.float32)
+        if mask_accidental_hits:
+            corr = jnp.where(neg_ids == labels_local[:, None], ops.MASK_CORR,
+                             corr)
+        biasg = bias_local[neg_ids] if bias_local is not None else None
+        # per-token logsumexp over this shard's corrected negatives only.
+        lse_local = ops.fused_head_lse(
+            w_local, h32, neg_ids, corr, biasg, abs_mode=abs_mode,
+            impl="auto" if impl == "fused" else impl)
+        c = lax.pmax(jnp.maximum(lax.stop_gradient(lse_local),
+                                 lax.stop_gradient(pos)), axis_name)
+        sumexp = (lax.psum(jnp.exp(lse_local - c), axis_name)
+                  + jnp.exp(pos - c))
+        return jnp.log(sumexp) + c - pos
+
     w_neg = w_local[neg_ids].astype(jnp.float32)
     if neg_ids.ndim == 1:  # batch-shared negatives: (m_local, d)
         o_neg = jnp.einsum("td,md->tm", h32, w_neg)
@@ -95,12 +127,10 @@ def sharded_sampled_softmax_loss(
     if bias_local is not None:
         o_neg = o_neg + bias_local[nb]
 
-    m_local = o_neg.shape[-1]
-    pos = transform_logits(
-        _positive_logit(w_local, h, labels, axis_name, bias_local), abs_mode)
     # eq. 2 with stratified correction: E[count] = m_local * q_local = m * q~.
-    o_adj = (transform_logits(o_neg, abs_mode) - logq_b
-             - jnp.log(jnp.asarray(m, jnp.float32)))
+    o_adj = transform_logits(o_neg, abs_mode) - logq_b - log_m
+    if mask_accidental_hits:
+        o_adj = jnp.where(nb == labels_local[:, None], -jnp.inf, o_adj)
 
     # Numerically stable global logsumexp over [pos, all shards' negatives].
     # The shift constant needs no gradient (it cancels analytically).

@@ -8,12 +8,30 @@ Conventions:
   * the loss is the cross entropy over the m+1 adjusted logits       (eq. 3);
   * ``abs_mode`` applies |.| to the raw logits before anything else — the
     paper's absolute softmax (eq. 11), recommended when sampling from a
-    symmetric kernel such as the quadratic one.
+    symmetric kernel such as the quadratic one;
+  * ACCIDENTAL HITS: the theorem's q ranges over the negatives only, but a
+    real sampler's support includes the label, so a draw can collide with the
+    positive.  Left in, the collided slot double-counts the positive in the
+    eq. 3 partition with a bogus eq. 2 correction (E[partition estimate] =
+    Z + exp(o_pos) instead of Z) — the bias Rawat et al. 2019 remove.  We
+    mask collided negatives to -inf AFTER the correction (they contribute
+    zero mass and zero gradient); masking restores E[sum_k exp(o'_k)] =
+    sum_{i != label} exp(o_i) for ANY q, so the estimator stays consistent.
+
+The per-example loss path dispatches to the fused Pallas head
+(``kernels/fused_head.py`` via ``kernels.ops.fused_head_lse``): gather +
+eq. 2 correction + hit mask + abs transform + (m+1)-way logsumexp in one
+kernel, never materializing the (T, m, d) negative-embedding tensor the
+einsum path gathers into HBM.  The einsum path stays as the oracle and is
+selected with ``impl="einsum"`` (shared ``(m,)`` negatives always use it —
+with one shared negative set there is no (T, m, d) tensor to avoid).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import ops
 
 Array = jax.Array
 
@@ -29,7 +47,8 @@ def adjust_neg_logits(o_neg: Array, logq: Array, m: int) -> Array:
 
 
 def sampled_softmax_loss(pos_logit: Array, neg_logits: Array, logq: Array,
-                         *, abs_mode: bool = False) -> Array:
+                         *, abs_mode: bool = False,
+                         hit_mask: Array | None = None) -> Array:
     """Cross entropy over [positive, m corrected negatives]  (eq. 3).
 
     pos_logit:  (...,) raw logit of the positive class.
@@ -37,11 +56,16 @@ def sampled_softmax_loss(pos_logit: Array, neg_logits: Array, logq: Array,
                 against pos_logit[..., None] — a shared (m,) negative set
                 broadcasts across the batch).
     logq:       (..., m) exact log sampling probabilities of the negatives.
+    hit_mask:   optional (..., m) bool, True where a negative collided with
+                the example's label — masked to -inf after the correction
+                (zero mass, zero gradient; module docstring).
     Returns per-example loss (...,).
     """
     m = neg_logits.shape[-1]
     pos = transform_logits(pos_logit, abs_mode)
     neg = adjust_neg_logits(transform_logits(neg_logits, abs_mode), logq, m)
+    if hit_mask is not None:
+        neg = jnp.where(hit_mask, -jnp.inf, neg)
     pos_b = jnp.broadcast_to(pos[..., None], (*neg.shape[:-1], 1))
     all_logits = jnp.concatenate([pos_b, neg], axis=-1)
     return jax.nn.logsumexp(all_logits, axis=-1) - pos
@@ -49,13 +73,25 @@ def sampled_softmax_loss(pos_logit: Array, neg_logits: Array, logq: Array,
 
 def sampled_softmax_from_embeddings(
     w: Array, h: Array, labels: Array, neg_ids: Array, logq: Array,
-    *, abs_mode: bool = False, bias: Array | None = None) -> Array:
+    *, abs_mode: bool = False, bias: Array | None = None,
+    mask_accidental_hits: bool = True, impl: str = "auto") -> Array:
     """Convenience wrapper computing logits from the class-embedding table.
 
     w: (n, d) class embeddings; h: (T, d) hidden states; labels: (T,);
     neg_ids/logq: (T, m) per-example or (m,) shared negatives.
+    ``mask_accidental_hits`` masks negatives that collided with the label
+    (module docstring); ``impl`` picks the head implementation: "einsum" is
+    the dense oracle, everything else routes per-example negatives through
+    the fused head ("auto" resolves to the Pallas kernel on TPU and the
+    chunked fallback elsewhere; "pallas"/"chunked" force a path).  Shared
+    (m,) negatives always take the einsum path — they never build a
+    (T, m, d) tensor in the first place.
     Returns per-example loss (T,).
     """
+    if neg_ids.ndim == 2 and impl != "einsum":
+        return _fused_from_embeddings(
+            w, h, labels, neg_ids, logq, abs_mode=abs_mode, bias=bias,
+            mask_accidental_hits=mask_accidental_hits, impl=impl)
     h = h.astype(jnp.float32)
     w_pos = w[labels].astype(jnp.float32)  # (T, d)
     pos_logit = jnp.einsum("td,td->t", h, w_pos)
@@ -63,14 +99,46 @@ def sampled_softmax_from_embeddings(
         w_neg = w[neg_ids].astype(jnp.float32)  # (m, d)
         neg_logits = jnp.einsum("td,md->tm", h, w_neg)
         logq = jnp.broadcast_to(logq[None, :], neg_logits.shape)
+        hit = neg_ids[None, :] == labels[:, None]
     else:
         w_neg = w[neg_ids].astype(jnp.float32)  # (T, m, d)
         neg_logits = jnp.einsum("td,tmd->tm", h, w_neg)
+        hit = neg_ids == labels[:, None]
     if bias is not None:
         pos_logit = pos_logit + bias[labels]
         neg_logits = neg_logits + bias[neg_ids]
-    return sampled_softmax_loss(pos_logit, neg_logits, logq,
-                                abs_mode=abs_mode)
+    return sampled_softmax_loss(
+        pos_logit, neg_logits, logq, abs_mode=abs_mode,
+        hit_mask=hit if mask_accidental_hits else None)
+
+
+def _fused_from_embeddings(w, h, labels, neg_ids, logq, *, abs_mode, bias,
+                           mask_accidental_hits, impl):
+    """Per-example negatives through the fused head (kernels/fused_head.py).
+
+    Builds the (T, 1+m) gather plan — column 0 the positive with correction
+    0, columns 1..m the negatives with ln(m q) (+MASK_CORR on accidental
+    hits) — and subtracts the separately-computed positive logit from the
+    kernel's logsumexp.  The (T, d) positive re-gather outside the kernel is
+    the price of keeping the kernel a pure corrected-LSE (its autodiff is a
+    row gather/scatter, negligible next to the (T, m, d) it avoids)."""
+    t, m = neg_ids.shape
+    corr_neg = (logq + jnp.log(jnp.asarray(m, jnp.float32))
+                ).astype(jnp.float32)
+    if mask_accidental_hits:
+        corr_neg = jnp.where(neg_ids == labels[:, None], ops.MASK_CORR,
+                             corr_neg)
+    ids = jnp.concatenate([labels[:, None], neg_ids], axis=1)
+    corr = jnp.concatenate([jnp.zeros((t, 1), jnp.float32), corr_neg],
+                           axis=1)
+    biasg = bias[ids] if bias is not None else None
+    lse = ops.fused_head_lse(w, h, ids, corr, biasg, abs_mode=abs_mode,
+                             impl="auto" if impl == "fused" else impl)
+    pos_logit = jnp.einsum("td,td->t", h.astype(jnp.float32),
+                           w[labels].astype(jnp.float32))
+    if bias is not None:
+        pos_logit = pos_logit + bias[labels]
+    return lse - transform_logits(pos_logit, abs_mode)
 
 
 def full_softmax_loss(w: Array, h: Array, labels: Array,

@@ -11,9 +11,16 @@
   rff_features  — fused positive-RFF features + per-leaf feature-sum
                   reduction (stats refresh of the exp-kernel sampler,
                   DESIGN.md §2.7; the (n, D) feature matrix never hits HBM)
-  sampled_loss  — fused corrected sampled-softmax loss: logits + eq. 2
-                  correction + online logsumexp, never materializing (T, m)
-                  logits in HBM
+  sampled_loss  — fused corrected sampled-softmax loss for SHARED (m,)
+                  negatives: logits + eq. 2 correction + online logsumexp,
+                  never materializing (T, m) logits in HBM
+  fused_head    — fused head for PER-EXAMPLE (T, m) negatives (DESIGN.md
+                  §4): positive/negative row gather (the gather is the
+                  block fetch), eq. 2 correction, accidental-hit masking,
+                  abs-mode transform, and the (m+1)-way logsumexp, plus a
+                  custom-VJP backward that scatter-adds dL/dw and
+                  accumulates dL/dh in the same tiles — the (T, m, d)
+                  negative tensor never exists in HBM
   flash_attention — causal online-softmax attention (backbone hot spot)
 
 Each kernel ships with a pure-jnp oracle in ref.py and a jit wrapper in

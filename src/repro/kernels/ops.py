@@ -15,7 +15,11 @@ import numpy as np
 
 from repro.kernels.block_scores import block_scores as _block_scores
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.fused_head import MASK_CORR
+from repro.kernels.fused_head import fused_lse as _fused_lse
+from repro.kernels.fused_head import fused_lse_bwd as _fused_lse_bwd
 from repro.kernels.leaf_scores import leaf_scores as _leaf_scores
+from repro.kernels import ref
 from repro.kernels.rff_features import rff_features as _rff_features
 from repro.kernels.sampled_loss import sampled_loss as _sampled_loss
 from repro.kernels.zstats import zstats as _zstats
@@ -118,6 +122,140 @@ def sampled_loss(h: Array, w_neg: Array, logq: Array, pos_logit: Array,
                         m_tile=min(m_tile, wp.shape[0]),
                         interpret=_interpret())
     return out[:t]
+
+
+# --- fused sampled-softmax head (kernels/fused_head.py) ----------------------
+
+#: token-chunk size of the non-TPU fallback: peak gather is (chunk, K, d).
+FUSED_HEAD_CHUNK = 128
+#: VMEM budget for the Pallas backward's resident (n, d) dL/dw accumulator;
+#: larger head shards fall back to the chunked path.
+FUSED_HEAD_VMEM_BYTES = 8 * 1024 * 1024
+
+
+def _resolve_fused_impl(impl: str, n: int, d: int) -> str:
+    if impl not in ("auto", "pallas", "chunked"):
+        raise ValueError(f"fused_head_lse impl={impl!r} not in "
+                         "('auto', 'pallas', 'chunked')")
+    if impl != "auto":
+        return impl
+    if not _interpret() and n * d * 4 <= FUSED_HEAD_VMEM_BYTES:
+        return "pallas"
+    return "chunked"
+
+
+def _fused_chunks(t: int, *arrays):
+    """Pad the token axis to a FUSED_HEAD_CHUNK multiple and stack chunks."""
+    tc = min(FUSED_HEAD_CHUNK, t)
+    pad = (-t) % tc
+    out = []
+    for a, fill in arrays:
+        ap = jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1),
+                     constant_values=fill)
+        out.append(ap.reshape(-1, tc, *a.shape[1:]))
+    return out
+
+
+def _chunked_lse(w, h, ids, corr, biasg, abs_mode):
+    """Non-TPU forward: lax.map over token chunks — peak intermediate is a
+    (chunk, K, d) gather instead of (T, K, d).  Each chunk IS the dense
+    oracle (ref.fused_lse_ref gathers rows before upcasting, so no fp32
+    copy of the whole table is ever made)."""
+    t = h.shape[0]
+
+    def one(args):
+        h_c, ids_c, corr_c, bias_c = args
+        return ref.fused_lse_ref(w, h_c, ids_c, corr_c, bias_c, abs_mode)
+
+    xs = _fused_chunks(t, (h, 0), (ids, 0), (corr, MASK_CORR), (biasg, 0))
+    return jax.lax.map(one, tuple(xs)).reshape(-1)[:t]
+
+
+def _chunked_lse_bwd(w, h, ids, corr, biasg, lse, gbar, abs_mode):
+    """Non-TPU backward: scan over token chunks carrying the (n, d) dL/dw
+    accumulator; recomputes the forward per chunk (flash-style)."""
+    n, d = w.shape
+    t = h.shape[0]
+
+    def body(dw, args):
+        h_c, ids_c, corr_c, bias_c, lse_c, g_c = args
+        h32 = h_c.astype(jnp.float32)
+        rows = w[ids_c].astype(jnp.float32)  # gather, THEN upcast (tc, K, d)
+        o = jnp.einsum("tkd,td->tk", rows, h32) + bias_c
+        tl = jnp.abs(o) if abs_mode else o
+        p = jnp.exp((tl - corr_c) - lse_c[:, None]) * g_c[:, None]
+        dcorr_c = -p  # corr applies after |.|: no sign chain
+        if abs_mode:
+            p = p * jnp.sign(o)
+        dh_c = jnp.einsum("tk,tkd->td", p, rows)
+        dw = dw.at[ids_c].add(p[..., None] * h32[:, None, :])
+        return dw, (dh_c, p, dcorr_c)
+
+    xs = _fused_chunks(t, (h, 0), (ids, 0), (corr, MASK_CORR), (biasg, 0),
+                       (lse, 0), (gbar, 0))
+    dw, (dh, dcoef, dcorr) = jax.lax.scan(body, jnp.zeros((n, d), jnp.float32),
+                                          tuple(xs))
+    k = ids.shape[1]
+    return (dw, dh.reshape(-1, d)[:t], dcoef.reshape(-1, k)[:t],
+            dcorr.reshape(-1, k)[:t])
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _fused_head_lse(w, h, ids, corr, biasg, abs_mode, impl):
+    return _fused_head_lse_fwd(w, h, ids, corr, biasg, abs_mode, impl)[0]
+
+
+def _fused_head_lse_fwd(w, h, ids, corr, biasg, abs_mode, impl):
+    if impl == "pallas":
+        lse = _fused_lse(w, h, ids, corr, biasg, abs_mode=abs_mode,
+                         interpret=_interpret())
+    else:
+        lse = _chunked_lse(w, h, ids, corr, biasg, abs_mode)
+    return lse, (w, h, ids, corr, biasg, lse)
+
+
+def _fused_head_lse_bwd(abs_mode, impl, res, gbar):
+    w, h, ids, corr, biasg, lse = res
+    if impl == "pallas":
+        dw, dh, dcoef, dcorr = _fused_lse_bwd(w, h, ids, corr, biasg, lse,
+                                              gbar, abs_mode=abs_mode,
+                                              interpret=_interpret())
+    else:
+        dw, dh, dcoef, dcorr = _chunked_lse_bwd(w, h, ids, corr, biasg, lse,
+                                                gbar, abs_mode)
+    return (dw.astype(w.dtype), dh.astype(h.dtype),
+            np.zeros(ids.shape, jax.dtypes.float0),
+            dcorr.astype(corr.dtype), dcoef.astype(biasg.dtype))
+
+
+_fused_head_lse.defvjp(_fused_head_lse_fwd, _fused_head_lse_bwd)
+
+
+def fused_head_lse(w: Array, h: Array, ids: Array, corr: Array,
+                   biasg: Array | None = None, *, abs_mode: bool = False,
+                   impl: str = "auto") -> Array:
+    """Fused sampled-softmax head: per-token corrected logsumexp.  -> (T,).
+
+    w: (n, d) head table; h: (T, d) hidden states; ids: (T, K) rows to
+    gather; corr: (T, K) per-slot corrections SUBTRACTED after the abs-mode
+    transform (0 for a positive slot, ``ln(m q)`` for a negative per eq. 2,
+    ``MASK_CORR`` for accidental hits / padding — those slots contribute
+    exactly zero mass and zero gradient); biasg: optional (T, K) pre-gathered
+    class bias ADDED to the raw logit before the transform.
+
+    Differentiable wrt w, h, corr, and biasg via ``jax.custom_vjp``: the
+    backward scatter-adds dL/dw and accumulates dL/dh without materializing
+    the (T, K, d) gather (kernels/fused_head.py).  ``impl``: "auto" picks the
+    Pallas kernel on TPU (when the dL/dw accumulator fits VMEM) and the
+    chunked jnp path elsewhere; "pallas"/"chunked" force a path ("pallas"
+    off-TPU runs in interpret mode — correctness only)."""
+    t, k = ids.shape
+    if biasg is None:
+        biasg = jnp.zeros((t, k), jnp.float32)
+    impl = _resolve_fused_impl(impl, *w.shape)
+    return _fused_head_lse(w, h, ids.astype(jnp.int32),
+                           corr.astype(jnp.float32),
+                           biasg.astype(jnp.float32), bool(abs_mode), impl)
 
 
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,

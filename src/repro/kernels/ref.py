@@ -61,6 +61,19 @@ def sampled_loss_ref(h: Array, w_neg: Array, logq: Array, pos_logit: Array,
     return jax.nn.logsumexp(allx, axis=-1) - pos_logit.astype(jnp.float32)
 
 
+def fused_lse_ref(w: Array, h: Array, ids: Array, corr: Array, biasg: Array,
+                  abs_mode: bool = False) -> Array:
+    """Dense oracle of the fused-head logsumexp (kernels/fused_head.py).
+
+    w: (n, d); h: (T, d); ids/corr/biasg: (T, K) -> (T,) fp32
+    logsumexp_k(transform(<h_t, w_{ids[t,k]}> + biasg[t,k]) - corr[t,k]).
+    Materializes the (T, K, d) gather the kernel exists to avoid."""
+    rows = w[ids].astype(jnp.float32)                       # (T, K, d)
+    o = jnp.einsum("tkd,td->tk", rows, h.astype(jnp.float32)) + biasg
+    tl = jnp.abs(o) if abs_mode else o
+    return jax.nn.logsumexp(tl - corr, axis=-1)
+
+
 def flash_attention_ref(q: Array, k: Array, v: Array, *, causal: bool
                         ) -> Array:
     """q,k,v: (B, S, H, hd) (MHA layout) -> (B, S, H, hd)."""

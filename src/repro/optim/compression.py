@@ -45,11 +45,15 @@ def topk_error_feedback(frac: float = 0.05) -> GradientTransform:
     def update(grads, state, params):
         def per(g, e):
             g32 = g.astype(jnp.float32) + e
-            flat = jnp.abs(g32).reshape(-1)
+            flat = g32.reshape(-1)
             k = max(1, int(flat.shape[0] * frac))
-            thresh = jax.lax.top_k(flat, k)[0][-1]
-            mask = jnp.abs(g32) >= thresh
-            sent = jnp.where(mask, g32, 0.0)
+            # Select EXACTLY k entries by index.  A magnitude threshold
+            # (|g| >= kth value) ships every tie with the kth magnitude —
+            # common for bf16/quantized grads, where it can send far more
+            # than k and leave the error buffer under-accumulated.
+            _, idx = jax.lax.top_k(jnp.abs(flat), k)
+            sent = jnp.zeros_like(flat).at[idx].set(flat[idx])
+            sent = sent.reshape(g32.shape)
             return sent.astype(g.dtype), g32 - sent
 
         flat_g, treedef = jax.tree_util.tree_flatten(grads)

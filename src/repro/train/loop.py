@@ -11,8 +11,15 @@ Fault model (single-host simulation of the 1000+-node behaviors):
   * stragglers       — per-step wall time is tracked against a running
                        median; outliers are logged and counted (on real
                        fleets this signal feeds the scheduler; here it is
-                       surfaced in metrics and tested via injection);
-  * failure injection— `fail_at_step` raises mid-run (test hook).
+                       surfaced in metrics and tested via injection).
+                       Warmup steps (jit compile — the first
+                       ``straggler_warmup`` steps of THIS process, so a
+                       restart's recompile is also excluded) never enter
+                       the duration window: a multi-second compile time in
+                       the window inflates the median and masks early
+                       stragglers;
+  * failure injection— `fail_at_step` raises mid-run; `slow_step_injection`
+                       sleeps inside a step's timed region (test hooks).
 """
 from __future__ import annotations
 
@@ -43,7 +50,9 @@ def fit(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
         data: ShardedBatchIterator, steps: int, *,
         checkpoint_dir: str | None = None, checkpoint_every: int = 50,
         keep: int = 3, seed: int = 0, straggler_factor: float = 3.0,
+        straggler_warmup: int = 1, straggler_min_window: int = 3,
         fail_at_step: int | None = None,
+        slow_step_injection: dict[int, float] | None = None,
         log_every: int = 10,
         eval_fn: Callable[[TrainState], float] | None = None,
         max_len: int = 4096) -> LoopResult:
@@ -63,24 +72,32 @@ def fit(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
     losses: list[float] = []
     stragglers: list[int] = []
     durations: list[float] = []
+    measured = 0  # steps timed in THIS process (restart recompiles too)
     start = int(jax.device_get(state.step))
     for i in range(start, steps):
         if fail_at_step is not None and i == fail_at_step:
             raise RuntimeError(f"injected failure at step {i}")
         batch = next(data)
         t0 = time.perf_counter()
+        if slow_step_injection and i in slow_step_injection:
+            time.sleep(slow_step_injection[i])  # test hook: fake straggler
         state, metrics = step_fn(state, batch,
                                  jax.random.fold_in(
                                      jax.random.PRNGKey(seed + 1), i))
         loss = float(jax.device_get(metrics["loss"]))
         dt = time.perf_counter() - t0
         losses.append(loss)
-        # Straggler watchdog: compare to running median (skip compile step).
-        if len(durations) >= 5:
-            med = float(np.median(durations[-50:]))
-            if dt > straggler_factor * med:
-                stragglers.append(i)
-        durations.append(dt)
+        # Straggler watchdog: compare to the running median of post-warmup
+        # steps.  Warmup (compile) durations never enter the window — one
+        # multi-second compile step in a young window drags the median up
+        # and masks real early stragglers.
+        if measured >= straggler_warmup:
+            if len(durations) >= straggler_min_window:
+                med = float(np.median(durations[-50:]))
+                if dt > straggler_factor * med:
+                    stragglers.append(i)
+            durations.append(dt)
+        measured += 1
         if log_every and i % log_every == 0:
             extra_s = ""
             if eval_fn is not None:

@@ -8,7 +8,9 @@ Data flow per step (LM example, production mesh):
         block stats refresh (Gram matmul)  |  or carried stats (stale OK)
         stratified kernel sampling: m/tp negatives per shard   [paper §3.2,
             top tree levels = TP axis, DESIGN.md §2.5]
-        corrected sampled softmax, global logsumexp via psum   [eq. 2-3]
+        corrected sampled softmax, global logsumexp via psum   [eq. 2-3;
+            accidental hits masked, per-example negatives through the
+            fused head kernel per cfg.head_impl — DESIGN.md §4]
   loss --> value_and_grad --> optimizer (clip + AdamW/Adafactor)
 
 The sampler's statistics are carried in TrainState and refreshed on a cadence
@@ -277,7 +279,8 @@ def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
         losses = distributed.sharded_sampled_softmax_loss(
             head_full, h2d, labels, sampler,
             jax.tree_util.tree_map(lax.stop_gradient, state_local),
-            m, key, axis_name=mdl, abs_mode=cfg.abs_softmax)
+            m, key, axis_name=mdl, abs_mode=cfg.abs_softmax,
+            impl=cfg.head_impl)
         lsum = jnp.sum(losses)
         if pure_fsdp:
             # every model column computed the same row-sum; average the
@@ -305,7 +308,8 @@ def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
             neg_ids, logq = sampler.sample_batch(state_local, h2d, m, key)
             return jnp.sum(sampled_softmax_from_embeddings(
                 head, h2d, labels, lax.stop_gradient(neg_ids),
-                lax.stop_gradient(logq), abs_mode=cfg.abs_softmax))
+                lax.stop_gradient(logq), abs_mode=cfg.abs_softmax,
+                impl=cfg.head_impl))
         stat_in = P(mdl) if carries_stats else P()
         if not carries_stats:  # dummies so shard_map sees arrays, not None
             z = cnt = wq = jnp.zeros((), jnp.float32)

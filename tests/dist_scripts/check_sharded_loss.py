@@ -60,6 +60,37 @@ ref_ids = np.argmax(np.asarray(h @ w.T), axis=-1)
 np.testing.assert_array_equal(np.asarray(ids), ref_ids)
 print("sharded argmax OK")
 
+# Per-example negatives: the fused-head branch (default impl="auto") must
+# match the einsum branch exactly — loss AND (dL/dw, dL/dh) — with and
+# without accidental-hit masking (DESIGN.md §4).
+sampler_pe = BlockSampler(block_size=32, shared=False)
+
+
+def loss_impl(w_local, h_rep, labels_rep, impl, mask):
+    state_local = sampler_pe.init(jax.random.PRNGKey(7), w_local)
+    return jnp.sum(dist.sharded_sampled_softmax_loss(
+        w_local, h_rep, labels_rep, sampler_pe, state_local, m,
+        jax.random.PRNGKey(42), axis_name="model", impl=impl,
+        mask_accidental_hits=mask))
+
+
+for mask in (True, False):
+    vals = {}
+    for impl in ("auto", "einsum"):
+        f = jax.jit(shard_map(
+            lambda wl, hr, lr, impl=impl, mask=mask: loss_impl(
+                wl, hr, lr, impl, mask),
+            mesh=mesh, check_vma=False,
+            in_specs=(P("model"), P(), P()), out_specs=P()))
+        vals[impl] = (f(w, h, labels),
+                      jax.jit(jax.grad(f, argnums=(0, 1)))(w, h, labels))
+    np.testing.assert_allclose(np.asarray(vals["auto"][0]),
+                               np.asarray(vals["einsum"][0]), rtol=2e-5)
+    for g_a, g_e in zip(vals["auto"][1], vals["einsum"][1]):
+        np.testing.assert_allclose(np.asarray(g_a), np.asarray(g_e),
+                                   rtol=2e-5, atol=2e-5)
+print("sharded fused head == einsum (loss + grads, masked/unmasked) OK")
+
 # Statistical sanity: with MANY samples the sampled loss approaches full loss.
 sampler_u = UniformSampler()
 state_u = {"n": n // 8}  # static local-vocab state, same on every shard

@@ -78,6 +78,24 @@ def test_topk_error_feedback_conserves_mass():
         total2, 2 * np.asarray(g["a"]) - np.asarray(sent["a"]), rtol=1e-6)
 
 
+def test_topk_error_feedback_exact_k_under_ties():
+    """Duplicated magnitudes (the bf16/quantized-grad case): a threshold
+    mask `|g| >= kth` ships EVERY tie — here all 16 entries — sending far
+    more than k and leaving the error buffer empty.  Selection must be by
+    index: exactly k entries sent, the rest accumulated."""
+    c = topk_error_feedback(frac=0.25)  # k = 4 of 16
+    g = {"a": jnp.full((4, 4), 2.0) * jnp.asarray([1, -1, 1, -1])[None, :]}
+    state = c.init(g)
+    sent, state = c.update(g, state, g)
+    sent_a = np.asarray(sent["a"])
+    assert (sent_a != 0).sum() == 4, sent_a
+    # mass is still conserved into the error buffer
+    np.testing.assert_allclose(sent_a + np.asarray(state["err"]["a"]),
+                               np.asarray(g["a"]), rtol=1e-6)
+    # the 12 unsent entries actually accumulated
+    assert (np.asarray(state["err"]["a"]) != 0).sum() == 12
+
+
 def test_cosine_schedule_shape():
     fn = cosine_schedule(1.0, warmup_steps=10, total_steps=100)
     assert float(fn(jnp.asarray(0))) == 0.0

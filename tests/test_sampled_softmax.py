@@ -165,6 +165,58 @@ def test_gradient_estimator_uniform_biased():
     assert bias > 0.05, f"uniform sampling should be biased, bias={bias}"
 
 
+@pytest.mark.parametrize("impl", ["einsum", "chunked"])
+def test_accidental_hit_masking_shrinks_eq5_bias(impl):
+    """Rigged high-collision case: q puts half its mass on the label, so
+    ~m/2 negatives collide with the positive.  Unmasked, the collided slots
+    re-enter the eq. 3 partition with a bogus eq. 2 correction and the
+    eq. 5 gradient estimator is visibly biased; masking them to zero mass
+    (Rawat et al. 2019) must shrink the bias by a large factor.  Identity
+    embeddings make dL/dh the eq. 5 estimate of dL/do directly."""
+    n, m, reps = 12, 32, 4000
+    o = jax.random.normal(jax.random.PRNGKey(0), (n,)) * 1.5
+    label = jnp.asarray(3)
+    logq = jnp.log(jnp.where(jnp.arange(n) == label, 0.5, 0.5 / (n - 1)))
+    w = jnp.eye(n)
+    full = full_softmax_grad_wrt_logits(o[None], label[None])[0]
+
+    def estimate(mask):
+        def one(k):
+            ids = jax.random.categorical(k, logq, shape=(1, m))
+            f = lambda hh: jnp.sum(sampled_softmax_from_embeddings(
+                w, hh, label[None], ids, logq[ids],
+                mask_accidental_hits=mask, impl=impl))
+            return jax.grad(f)(o[None])[0]
+        keys = jax.random.split(jax.random.PRNGKey(1), reps)
+        return jax.vmap(one)(keys).mean(0)
+
+    bias_raw = float(jnp.max(jnp.abs(estimate(False) - full)))
+    bias_masked = float(jnp.max(jnp.abs(estimate(True) - full)))
+    # unmasked is badly biased; masked is within finite-m consistency noise
+    assert bias_raw > 0.08, bias_raw
+    assert bias_masked < 0.6 * bias_raw, (bias_masked, bias_raw)
+    assert bias_masked < 0.06, bias_masked
+
+
+def test_masked_loss_shared_matches_manual():
+    """Shared negatives: collided slots drop out of the eq. 3 cross entropy
+    exactly (masked == recomputing without the collided column)."""
+    n, d, t = 16, 6, 5
+    w = jax.random.normal(jax.random.PRNGKey(22), (n, d))
+    h = jax.random.normal(jax.random.PRNGKey(23), (t, d))
+    labels = jnp.full((t,), 2)
+    ids = jnp.asarray([2, 5, 9, 11])  # first one collides for every row
+    m = ids.shape[0]
+    logq = jnp.full((m,), -np.log(n))
+    got = sampled_softmax_from_embeddings(w, h, labels, ids, logq)
+    o = h @ w.T
+    pos = o[:, 2]
+    neg = o[:, ids[1:]] - logq[1:] - np.log(m)  # collided column removed
+    want = (jax.nn.logsumexp(jnp.concatenate([pos[:, None], neg], 1), -1)
+            - pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
 def test_shared_vs_per_example_shapes():
     n, d, t, m = 20, 6, 4, 8
     w = jax.random.normal(jax.random.PRNGKey(10), (n, d))

@@ -29,6 +29,30 @@ def test_loss_decreases_on_recsys():
     assert last < first - 0.2, (first, last)
 
 
+def test_straggler_watchdog_catches_early_straggler():
+    """Injected slow step right after compile must be flagged.  Regression:
+    the old watchdog let the multi-second step-0 compile time into the
+    duration window and required 5 samples before checking, so a straggler
+    at step 4 was invisible; with warmup dropped and a 3-sample window it
+    must be caught — and the compile step itself must never be flagged."""
+    cfg = _cfg()
+    opt = make_optimizer("adamw", 1e-2, weight_decay=0.0)
+    data = batch_iterator_for(cfg, CTX, global_batch=16, seq_len=0, seed=3)
+    res = fit(cfg, CTX, opt, data, steps=12, log_every=0, max_len=8,
+              straggler_factor=3.0, slow_step_injection={4: 1.0})
+    assert 4 in res.straggler_steps, res.straggler_steps
+    assert 0 not in res.straggler_steps, res.straggler_steps
+
+
+def test_straggler_watchdog_quiet_without_injection():
+    cfg = _cfg()
+    opt = make_optimizer("adamw", 1e-2, weight_decay=0.0)
+    data = batch_iterator_for(cfg, CTX, global_batch=16, seq_len=0, seed=4)
+    res = fit(cfg, CTX, opt, data, steps=12, log_every=0, max_len=8,
+              straggler_factor=25.0)
+    assert res.straggler_steps == [], res.straggler_steps
+
+
 def test_crash_restart_resumes_identically(tmp_path):
     """Run A: 30 steps straight.  Run B: crash at 17, restart, finish.
     Final losses must match bit-for-bit (same data order, same state)."""
