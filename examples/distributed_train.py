@@ -13,12 +13,12 @@ import time  # noqa: E402
 
 import jax  # noqa: E402
 
+from repro.api import init_train_state, make_train_step  # noqa: E402
 from repro.configs import get_config  # noqa: E402
 from repro.data.pipeline import batch_iterator_for  # noqa: E402
 from repro.launch.mesh import make_debug_mesh  # noqa: E402
 from repro.optim import make_optimizer  # noqa: E402
 from repro.sharding.rules import mesh_ctx  # noqa: E402
-from repro.train.step import init_train_state, make_train_step  # noqa: E402
 
 
 def main():

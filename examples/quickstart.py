@@ -1,45 +1,57 @@
 """Quickstart: kernel-based adaptive sampled softmax in ~70 lines.
 
-Builds a toy class-embedding table, samples negatives four ways (uniform,
-the paper's divide & conquer tree, the TPU two-level block sampler, and the
-exp-kernel RFF hierarchy), and shows that (a) the kernel samplers report
-exact log-probabilities and (b) the corrected sampled-softmax loss
-approaches the full softmax loss as m grows — fastest for the adaptive
-kernels.
+Everything goes through the ``repro.api.SoftmaxHead`` facade: build a toy
+class-embedding table, pick a sampler + estimator in the config, and show
+that (a) the kernel samplers report exact log-probabilities, (b) the
+corrected sampled-softmax loss approaches the full softmax loss as m grows
+— fastest for the adaptive kernels — and (c) the same facade swaps in the
+NCE / sampled-logistic estimators over identical negatives.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
-from repro.core import blocks, tree
-from repro.core.kernel_fns import quadratic_kernel
-from repro.core.sampled_softmax import (
-    full_softmax_loss,
-    sampled_softmax_from_embeddings,
-)
-from repro.core.samplers import make_sampler
+from repro.api import SoftmaxHead, make_sampler
+from repro.configs import get_config
 
 n_classes, d, batch = 4_000, 32, 32
 key = jax.random.PRNGKey(0)
 w = jax.random.normal(key, (n_classes, d)) * 0.3          # class embeddings
 h = jax.random.normal(jax.random.PRNGKey(1), (batch, d))  # hidden states
 labels = jax.random.randint(jax.random.PRNGKey(2), (batch,), 0, n_classes)
-kernel = quadratic_kernel(alpha=100.0)
 
+# abs_softmax=False: youtube-dnn defaults to the |o| softmax (eq. 11);
+# this demo compares against the PLAIN softmax so the exp-oracle row is
+# the matched zero-bias proposal (Thm 2.1).
+BASE = get_config("youtube-dnn").reduced(
+    vocab_size=n_classes, tower_dims=(d, d), sampler_block=64,
+    m_negatives=128, abs_softmax=False)
+
+
+def head_for(sampler: str, m: int, estimator: str = "sampled-softmax"):
+    return SoftmaxHead(dataclasses.replace(
+        BASE, sampler=sampler, m_negatives=m, estimator=estimator))
+
+
+# --- the dense reference ----------------------------------------------------
+full = head_for("uniform", 128, estimator="full")
 print("full softmax loss (reference):",
-      float(full_softmax_loss(w, h, labels).mean()))
+      float(full.loss(w, h, labels).mean()))
 
 # --- the paper's O(D log n) divide & conquer tree (faithful) ---------------
-stats = tree.build(w, kernel, leaf_size=64)
-ids, logq = tree.sample(stats, kernel, h[0], m=128, key=jax.random.PRNGKey(3))
-print(f"\ntree sampler: {len(set(ids.tolist()))} distinct negatives, "
-      f"logq in [{float(logq.min()):.2f}, {float(logq.max()):.2f}]")
+tree = head_for("tree-quadratic", 128)
+tstate = tree.init(jax.random.PRNGKey(3), w)
+ids, logq = tree.sample(tstate, h, jax.random.PRNGKey(4))
+print(f"\ntree sampler: {len(set(ids[0].tolist()))} distinct negatives for "
+      f"query 0, logq in [{float(logq.min()):.2f}, {float(logq.max()):.2f}]")
 
-# --- the TPU-native two-level block sampler --------------------------------
-bstats = blocks.build(w, block_size=256)
-ids_b, logq_b = blocks.sample_shared(bstats, kernel, h, m=128,
-                                     key=jax.random.PRNGKey(4))
+# --- the TPU-native two-level block sampler (one shared set per batch) ------
+block = head_for("block-quadratic-shared", 128)
+bstate = block.init(jax.random.PRNGKey(5), w)
+ids_b, _ = block.sample(bstate, h, jax.random.PRNGKey(6))
 print(f"block sampler (batch-shared): {len(set(ids_b.tolist()))} distinct")
 
 # --- the exp-kernel RFF hierarchy (q ~ exp(o/tau); DESIGN.md §2.7) ----------
@@ -51,18 +63,24 @@ print(f"rff sampler: {len(set(ids_r.tolist()))} distinct negatives, "
 
 # --- bias vs m across sampler families --------------------------------------
 for name in ("uniform", "block-quadratic-shared", "rff", "softmax"):
-    sampler = make_sampler(name, **({"dim": 128, "leaf_size": 64}
-                                    if name == "rff" else {}))
-    state = sampler.init(jax.random.PRNGKey(5), w)
     print(f"\n{name}:")
     for m in (16, 64, 256):
+        head = head_for(name, m)
+        state = head.init(jax.random.PRNGKey(5), w)
 
         @jax.jit
-        def one_rep(key, state=state, m=m, sampler=sampler):
-            nid, lq = sampler.sample_batch(state, h, m, key)
-            return sampled_softmax_from_embeddings(w, h, labels, nid,
-                                                   lq).mean()
+        def one_rep(key, head=head, state=state):
+            return head.loss(w, h, labels, state=state, key=key).mean()
 
         keys = jax.random.split(jax.random.PRNGKey(100), 8)
         mean = float(jnp.mean(jax.lax.map(one_rep, keys)))
         print(f"  m={m:5d}  mean sampled loss {mean:.4f}")
+
+# --- same negatives, different estimator ------------------------------------
+print("\nestimators over the block sampler at m=128:")
+for est in ("sampled-softmax", "nce", "sampled-logistic"):
+    head = head_for("block-quadratic-shared", 128, estimator=est)
+    state = head.init(jax.random.PRNGKey(5), w)
+    loss = head.loss(w, h, labels, state=state,
+                     key=jax.random.PRNGKey(8)).mean()
+    print(f"  {est:17s} mean loss {float(loss):.4f}")

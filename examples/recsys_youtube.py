@@ -22,24 +22,25 @@ from repro.data.synthetic import SyntheticRecsys
 
 
 def candidate_generation(cfg, state, k: int):
-    """Top-k candidate retrieval through the packed index vs the dense head."""
+    """Top-k candidate retrieval through the packed index vs the dense head
+    — both sides through the ``repro.api.SoftmaxHead`` facade."""
     import jax
 
     from benchmarks.common import time_fn
+    from repro.api import SoftmaxHead
     from repro.data.pipeline import batch_iterator_for
     from repro.models import api
     from repro.serve import retrieval
     from repro.sharding.rules import local_ctx
-    from repro.train.step import export_retrieval_index
 
     ctx = local_ctx()
-    index = export_retrieval_index(state, cfg, ctx, leaf_size=4)
+    softmax_head = SoftmaxHead(cfg)
     head = api.head_table(state.params, cfg)
+    index = softmax_head.export_index(head, ctx, leaf_size=4)
     data = batch_iterator_for(cfg, ctx, global_batch=256, seq_len=0, seed=7)
     users, _, _ = api.backbone_hidden(state.params, next(data), cfg, ctx)
 
-    f_dense = jax.jit(lambda h: retrieval.dense_topk(
-        head, h, k, n_valid=cfg.vocab_size))
+    f_dense = jax.jit(lambda h: softmax_head.decode_topk(head, h, k))
     us_dense = time_fn(f_dense, users)
     print(f"\ncandidate generation: {users.shape[0]} users, "
           f"{cfg.vocab_size} items, top-{k}")
@@ -47,8 +48,8 @@ def candidate_generation(cfg, state, k: int):
           f"recall@{k}=1.000  ({us_dense/1e3:.1f} ms)")
     leaves = index.num_leaves_shard
     for beam in (leaves // 8, leaves // 4, leaves // 2):
-        f_beam = jax.jit(lambda h, b=beam: retrieval.decode_topk(
-            index, h, k, b))
+        f_beam = jax.jit(lambda h, b=beam: softmax_head.decode_topk(
+            head, h, k, index=index, beam=b))
         us_beam = time_fn(f_beam, users)
         rec = retrieval.recall_at_k(index, head, users, k, beam)
         print(f"  beam={beam:4d}/{leaves}  "

@@ -15,6 +15,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.api import SoftmaxHead
 from repro.configs import get_config
 from repro.models import api
 from repro.serve import retrieval
@@ -72,8 +73,7 @@ def main():
 
     # --- index-backed top-k decode (DESIGN.md §5) --------------------------
     head = api.head_table(params, cfg)
-    index = retrieval.build_index(head, leaf_size=16,
-                                  vocab_size=cfg.vocab_size)
+    index = SoftmaxHead(cfg).export_index(head, leaf_size=16)
     beam = args.beam or None
     topk_step = jax.jit(make_topk_step(cfg, ctx, args.topk, index=index,
                                        beam=beam))

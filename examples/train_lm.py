@@ -15,14 +15,13 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.api import SoftmaxHead, fit
 from repro.configs import get_config
-from repro.core.sampled_softmax import full_softmax_loss
 from repro.data.pipeline import batch_iterator_for
 from repro.data.synthetic import SyntheticLM
 from repro.models import api
 from repro.optim import cosine_schedule, make_optimizer
 from repro.sharding.rules import local_ctx
-from repro.train.loop import fit
 
 PRESETS = {
     # name: (d_model, layers, heads, kv, d_ff, vocab, seq, batch)
@@ -37,6 +36,9 @@ def main():
     ap.add_argument("--preset", choices=PRESETS, default="small")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--sampler", default="block-quadratic-shared")
+    ap.add_argument("--estimator", default="sampled-softmax",
+                    help="loss estimator over the sampled negatives "
+                         "(sampled-softmax | nce | sampled-logistic | full)")
     ap.add_argument("--m", type=int, default=128)
     ap.add_argument("--checkpoint-dir", default=None)
     args = ap.parse_args()
@@ -47,6 +49,7 @@ def main():
         name=f"llama-{args.preset}", vocab_size=vocab, d_model=d,
         n_layers=nl, n_heads=nh, n_kv_heads=nkv, head_dim=d // nh, d_ff=ff,
         sampler=args.sampler, m_negatives=args.m,
+        estimator=args.estimator,
         sampler_block=256, sampler_proj_rank=None, microbatches=1,
         dtype="float32", param_dtype="float32", remat=False)
 
@@ -57,16 +60,19 @@ def main():
     data = batch_iterator_for(cfg, ctx, global_batch=batch, seq_len=seq)
     lm_task = SyntheticLM(vocab_size=vocab)
     print(f"model: {cfg.name}  vocab={vocab}  sampler={cfg.sampler} "
-          f"m={cfg.m_negatives}")
+          f"estimator={cfg.estimator} m={cfg.m_negatives}")
     print(f"chain entropy (loss floor): {lm_task.chain_entropy():.4f}")
 
     eval_batch = next(data)
+    # The dense oracle through the same facade the train step uses:
+    # estimator="full" needs no sampler state and no key.
+    eval_head = SoftmaxHead(dataclasses.replace(cfg, estimator="full"))
 
     @jax.jit
     def eval_loss(params):
         h, labels, _ = api.backbone_hidden(params, eval_batch, cfg, ctx)
-        return jnp.mean(full_softmax_loss(api.head_table(params, cfg), h,
-                                          labels))
+        return jnp.mean(eval_head.loss(api.head_table(params, cfg), h,
+                                       labels))
 
     t0 = time.time()
     res = fit(cfg, ctx, opt, data, steps=args.steps, log_every=20,

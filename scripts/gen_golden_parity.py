@@ -1,0 +1,137 @@
+"""Generate the golden-parity fixture for the SamplerState/estimator refactor.
+
+Run against a known-good revision to capture, per carried sampler family
+(tree, block, block-shared, rff):
+
+  * the first 4 train-step losses of the mesh=None recsys smoke config
+    (bit patterns, not decimal strings — the parity bar is bit-identity);
+  * the component-level head path under a fixed key: sampled negative ids,
+    their exact log q, and the per-example sampled-softmax losses computed
+    from carried statistics built off a toy head table.
+
+``tests/test_golden_parity.py`` replays the same computation through the
+current code and asserts bit-identical results, proving a refactor of the
+state plumbing (ISSUE 5) changed no numerics.  Regenerate deliberately with:
+
+    PYTHONPATH=src python scripts/gen_golden_parity.py
+
+The fixture is committed; CI never regenerates it.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import numpy as np
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT = ROOT / "tests" / "golden" / "parity.json"
+
+FAMILIES = ("tree-quadratic", "block-quadratic", "block-quadratic-shared",
+            "rff")
+
+
+def f32_bits(x) -> list[int]:
+    """float32 array -> uint32 bit patterns (exact, platform-independent)."""
+    return np.asarray(x, np.float32).reshape(-1).view(np.uint32).tolist()
+
+
+def smoke_cfg(family: str):
+    from repro.configs import get_config
+
+    return get_config("youtube-dnn").reduced(
+        vocab_size=256, m_negatives=32, sampler=family, sampler_block=16,
+        rff_dim=64, tower_dims=(64, 32), user_feature_dim=64, history_len=3)
+
+
+def train_losses(family: str) -> list[int]:
+    """4 jitted train-step losses, mesh=None, fixed keys."""
+    from repro.data.pipeline import batch_iterator_for
+    from repro.optim import make_optimizer
+    from repro.sharding.rules import local_ctx
+    from repro.train.step import init_train_state, make_train_step
+
+    cfg = smoke_cfg(family)
+    ctx = local_ctx()
+    opt = make_optimizer("adamw", 1e-2, weight_decay=0.0)
+    data = batch_iterator_for(cfg, ctx, global_batch=32, seq_len=0, seed=1)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, ctx, opt, max_len=8)
+    step = jax.jit(make_train_step(cfg, ctx, opt))
+    losses = []
+    for i in range(4):
+        state, metrics = step(state, next(data),
+                              jax.random.fold_in(jax.random.PRNGKey(5), i))
+        losses.append(metrics["loss"])
+    return f32_bits(jax.device_get(losses))
+
+
+def component_draws(family: str) -> dict:
+    """Carried-statistics path without the backbone: build stats from a toy
+    head table exactly as the train island does, sample, compute the
+    corrected loss through the einsum oracle (platform-stable)."""
+    import jax.numpy as jnp
+
+    from repro.core.sampled_softmax import sampled_softmax_from_embeddings
+
+    cfg = smoke_cfg(family)
+    n, d, t, m = 256, 32, 16, 32
+    w = jax.random.normal(jax.random.PRNGKey(11), (n, d)) * 0.4
+    h = jax.random.normal(jax.random.PRNGKey(12), (t, d))
+    labels = jax.random.randint(jax.random.PRNGKey(13), (t,), 0, n)
+    n_valid = jnp.asarray(n, jnp.int32)
+
+    state_local = _carried_state(cfg, w, n_valid, jax.random.PRNGKey(7))
+    ids, logq = _sampler(cfg).sample_batch(state_local, h, m,
+                                           jax.random.PRNGKey(42))
+    loss = sampled_softmax_from_embeddings(w, h, labels, ids, logq,
+                                           impl="einsum")
+    return {
+        "neg_ids": np.asarray(jax.device_get(ids)).reshape(-1).tolist(),
+        "logq_bits": f32_bits(jax.device_get(logq)),
+        "loss_bits": f32_bits(jax.device_get(loss)),
+    }
+
+
+def _sampler(cfg):
+    try:  # post-refactor spelling
+        from repro.core.samplers import sampler_from_config
+        return sampler_from_config(cfg)
+    except ImportError:
+        from repro.train.step import sampler_from_cfg
+        return sampler_from_cfg(cfg)
+
+
+def _carried_state(cfg, w, n_valid, key):
+    """Local (hydrated) sampler state from carried arrays, both spellings."""
+    from repro.core.samplers import RFFSampler
+    from repro.core.kernel_fns import rff_directions
+
+    sampler = _sampler(cfg)
+    if hasattr(sampler, "init_state"):  # post-refactor protocol
+        return sampler.hydrate(sampler.init_state(key, w, n_valid=n_valid),
+                               n_valid)
+    from repro.train.step import _build_stat_arrays, _stats_from_arrays
+    proj = None
+    if isinstance(sampler, RFFSampler):
+        proj = rff_directions(key, cfg.rff_dim, w.shape[1])
+    z, cnt, wq = _build_stat_arrays(sampler, cfg, w, n_valid, proj)
+    return {"stats": _stats_from_arrays(sampler, z, cnt, wq, n_valid),
+            "proj": proj}
+
+
+def main():
+    out = {"comment": "see scripts/gen_golden_parity.py", "families": {}}
+    for fam in FAMILIES:
+        print(f"-- {fam}")
+        out["families"][fam] = {
+            "train_loss_bits": train_losses(fam),
+            "component": component_draws(fam),
+        }
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(out, indent=1) + "\n")
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

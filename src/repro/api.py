@@ -1,0 +1,221 @@
+"""``repro.api`` — the stable facade over the whole sampled-softmax head.
+
+The paper's pitch is that kernel-based sampling "relies only on the model's
+last hidden layer" and so "can be easily applied to many models".  This
+module is that claim as an API: everything the head does — adaptive
+negative sampling, the corrected loss estimator, the fused Pallas kernel
+dispatch, serving-time top-k retrieval — sits behind ONE object built from
+ONE config:
+
+    import jax
+    from repro.api import SoftmaxHead
+    from repro.configs import get_config
+
+    cfg = get_config("youtube-dnn").reduced()     # sampler/estimator knobs
+    head = SoftmaxHead(cfg)                       # validates cfg up front
+
+    state  = head.init(key, w)                    # SamplerState pytree
+    state  = head.refresh(state, w)               # adapt to new params
+    losses = head.loss(w, h, labels, state=state, key=key)   # (T,)
+    index  = head.export_index(w)                 # serving MIPS index
+    ids, logits = head.decode_topk(w, h, k=10, index=index)
+
+``w`` is any (n, d) class-embedding table, ``h`` any (T, d) batch of
+last-hidden-layer vectors — the facade never touches the backbone.  For
+full training runs the train-step factories consume the same config and
+carry the same ``SamplerState`` (re-exported here); ``fit`` drives the
+production loop (checkpoint/restart, stragglers).
+
+Everything in ``__all__`` is covered by the public-API surface test
+(``tests/test_api_surface.py``): signature changes fail CI loudly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import estimators as _estimators
+from repro.core import samplers as _samplers
+from repro.core.estimators import (  # noqa: F401  (re-export)
+    Estimator,
+    estimator_names,
+    make_estimator,
+)
+from repro.core.samplers import (  # noqa: F401  (re-export)
+    Sampler,
+    SamplerState,
+    make_sampler,
+    sampler_from_config,
+    sampler_names,
+)
+from repro.train.loop import fit  # noqa: F401  (re-export)
+from repro.train.step import (  # noqa: F401  (re-export)
+    TrainState,
+    abstract_train_state,
+    export_retrieval_index,
+    init_train_state,
+    make_train_step,
+)
+
+Array = jax.Array
+
+__all__ = [
+    "SoftmaxHead",
+    # state + registries
+    "SamplerState",
+    "Sampler",
+    "Estimator",
+    "make_sampler",
+    "sampler_from_config",
+    "sampler_names",
+    "make_estimator",
+    "estimator_names",
+    # training entry points (same config, same SamplerState)
+    "TrainState",
+    "make_train_step",
+    "init_train_state",
+    "abstract_train_state",
+    "export_retrieval_index",
+    "fit",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SoftmaxHead:
+    """Sampler + estimator + head-kernel dispatch bundled behind one config.
+
+    Frozen and hashable (it wraps a frozen ArchConfig), so it can be closed
+    over by jitted functions.  Construction validates the config — unknown
+    sampler/estimator/head_impl names and inconsistent knob combos raise
+    here, not inside jit tracing.
+    """
+
+    cfg: ArchConfig
+
+    def __post_init__(self):
+        self.cfg.validate()
+
+    # -- components (constructed on demand; samplers are stateless) ---------
+    @property
+    def sampler(self) -> Sampler:
+        return _samplers.sampler_from_config(self.cfg)
+
+    @property
+    def estimator(self) -> Estimator:
+        return _estimators.make_estimator(self.cfg.estimator)
+
+    def _check_table(self, w: Array) -> None:
+        """Fail fast on a table smaller than the configured vocab — ids
+        up to vocab_size would silently clamp in gathers and logq would be
+        reported over the wrong n.  MORE rows than vocab_size are fine:
+        that is a padded table; n_valid masks the padding everywhere."""
+        if w.shape[0] < self.cfg.vocab_size:
+            raise ValueError(
+                f"class table has {w.shape[0]} rows but cfg.vocab_size is "
+                f"{self.cfg.vocab_size}; pass a table covering the full "
+                "vocab (padding rows beyond vocab_size are allowed)")
+
+    # -- state lifecycle -----------------------------------------------------
+    def init(self, key: Array, w: Array) -> SamplerState:
+        """Carried sampler state from the class-embedding table ``w``.
+
+        Empty (leafless) for samplers that carry nothing — still a valid
+        pytree to thread/checkpoint."""
+        self._check_table(w)
+        return self.sampler.init_state(
+            key, w, n_valid=jnp.asarray(self.cfg.vocab_size, jnp.int32))
+
+    def refresh(self, state: SamplerState, w: Array) -> SamplerState:
+        """Rebuild the adaptive statistics against current ``w`` (one Gram
+        or feature matmul); run-lifetime constants are preserved."""
+        sampler = self.sampler
+        if not sampler.carries_state:
+            return state
+        self._check_table(w)
+        n_valid = jnp.asarray(self.cfg.vocab_size, jnp.int32)
+        return state.replace_stats(
+            sampler.build_stats(w, n_valid, state.const))
+
+    # -- sampling + loss -----------------------------------------------------
+    def sample(self, state: SamplerState, h: Array, key: Array,
+               m: int | None = None) -> tuple[Array, Array]:
+        """Draw negatives for a batch: ids + EXACT log q ((T, m), or (m,)
+        for batch-shared families).  Carrying samplers only — the
+        non-carrying families derive their runtime state from ``w`` at
+        loss time (use ``loss(...)`` or ``sampler.init(key, w)``)."""
+        sampler = self.sampler
+        if not sampler.carries_state:
+            raise TypeError(
+                f"sampler '{sampler.name}' carries no state; draw through "
+                "loss(...) or construct its runtime state with "
+                "sampler.init(key, w)")
+        m = m if m is not None else self.cfg.m_negatives
+        if m <= 0:
+            raise ValueError(f"m must be positive, got {m}")
+        runtime = sampler.hydrate(
+            state, jnp.asarray(self.cfg.vocab_size, jnp.int32))
+        return sampler.sample_batch(runtime, h, m, key)
+
+    def loss(self, w: Array, h: Array, labels: Array, *,
+             state: SamplerState | None = None, key: Array | None = None,
+             bias: Array | None = None) -> Array:
+        """Per-example estimator loss (T,) — the documented entry point.
+
+        Sampled estimators draw ``cfg.m_negatives`` fresh negatives under
+        ``key`` (stop-gradiented, as in training) and route the default
+        estimator through the fused Pallas head per ``cfg.head_impl``;
+        ``estimator='full'`` needs neither ``state`` nor ``key``.  The
+        numerics are the train island's mesh=None path exactly — both
+        delegate to ``core.estimators.local_sampled_loss``."""
+        est = self.estimator
+        cfg = self.cfg
+        self._check_table(w)
+        if est.needs_sampling:
+            if key is None:
+                raise ValueError(
+                    "sampled estimators need an explicit `key`")
+            if self.sampler.carries_state and state is None:
+                raise ValueError(
+                    f"sampler '{self.sampler.name}' carries state; pass "
+                    "state=head.init(key, w)")
+        return _estimators.local_sampled_loss(
+            est, self.sampler, w, h, labels, state, cfg.m_negatives, key,
+            n_valid=jnp.asarray(cfg.vocab_size, jnp.int32),
+            abs_mode=cfg.abs_softmax, bias=bias, impl=cfg.head_impl)
+
+    # -- serving -------------------------------------------------------------
+    def export_index(self, w: Array, ctx: Any = None,
+                     leaf_size: int | None = None):
+        """Pack ``w`` into the hierarchy-backed MIPS index (DESIGN.md §5)."""
+        from repro.serve import retrieval
+
+        self._check_table(w)
+        return retrieval.build_index(w, ctx, leaf_size=leaf_size,
+                                     vocab_size=self.cfg.vocab_size)
+
+    def decode_topk(self, w: Array, h: Array, k: int, *, index: Any = None,
+                    beam: int | None = None, ctx: Any = None
+                    ) -> tuple[Array, Array]:
+        """Top-k (ids, logits) per query: beam retrieval through ``index``
+        when given (exact at full beam), dense scoring otherwise.  With a
+        mesh ``ctx`` the dense path runs vocab-sharded (per-shard top-k +
+        one (T, k) all-gather — never a (T, n) logit tensor)."""
+        from repro.serve import retrieval
+
+        if index is not None:
+            return retrieval.decode_topk(index, h, k, beam, ctx)
+        if beam is not None:
+            raise ValueError(
+                "beam is a retrieval-index knob; without an index the "
+                "dense path scores every class — pass "
+                "index=head.export_index(w) to use a beam")
+        self._check_table(w)
+        if ctx is not None and getattr(ctx, "mesh", None) is not None:
+            from repro.serve import engine
+
+            return engine.decode_topk(self.cfg, ctx, w, h, k)
+        return retrieval.dense_topk(w, h, k, n_valid=self.cfg.vocab_size)

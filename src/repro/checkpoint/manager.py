@@ -4,6 +4,13 @@ Layout per step:  <dir>/step_000123/
     manifest.json   — pytree paths, shapes, dtypes, data-iterator state
     arrays.npz      — one entry per leaf (logical/global arrays)
 
+The manager is layout-agnostic: it flattens WHATEVER pytree it is handed by
+path.  In particular the train state's sampler statistics arrive as one
+self-describing ``SamplerState`` pytree (``.sampler_state/.stats/...``) —
+this module knows nothing about per-family array layouts (DESIGN.md §6);
+a layout mismatch at restore time (different sampler family, pre-refactor
+checkpoint) raises a pointed KeyError instead of a bare npz miss.
+
 Properties needed for 1000+-node operation, and how this module provides
 their single-host form:
 
@@ -129,6 +136,13 @@ class CheckpointManager:
         for (path, leaf), sh in zip(flat_like, flat_sh):
             key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                            for p in path)
+            if key not in data:
+                raise KeyError(
+                    f"checkpoint step {step} has no array '{key}': the "
+                    "stored state layout does not match `like` (e.g. a "
+                    "different sampler family's SamplerState, or a "
+                    "checkpoint from before a state-layout change).  "
+                    f"Stored keys: {manifest['keys']}")
             arr = data[key]
             if sh is not None:
                 leaves.append(jax.device_put(arr, sh))

@@ -93,6 +93,10 @@ class ArchConfig:
     # rff ignores sampler_proj_rank — omega: (D, d) IS its projection.
     rff_dim: int = 128
     rff_tau: float = 1.0
+    # loss estimator over the sampled negatives (core/estimators.py,
+    # DESIGN.md §6): "sampled-softmax" (the paper's eq. 2/3 — default),
+    # "nce", "sampled-logistic", or "full" (dense oracle; no sampling).
+    estimator: str = "sampled-softmax"
     # loss-head implementation (DESIGN.md §4): "auto" routes per-example
     # negatives through the fused Pallas head (chunked fallback off-TPU);
     # "einsum" keeps the dense oracle path; "pallas"/"chunked" force a path.
@@ -109,6 +113,67 @@ class ArchConfig:
     param_dtype: str = "bfloat16"
     remat: bool = True
     scan_layers: bool = True
+
+    # ---- validation ---------------------------------------------------------
+    HEAD_IMPLS = ("auto", "fused", "pallas", "chunked", "einsum")
+
+    def validate(self, tp: int = 1) -> "ArchConfig":
+        """Fail fast on unknown names / inconsistent head knobs.
+
+        Called at the construction seams (``make_train_step``,
+        ``repro.api.SoftmaxHead``) so a typo'd sampler or estimator raises
+        here, with the full list of choices, instead of as a ``KeyError``
+        deep inside jit tracing.  ``tp`` is the vocab-parallel degree when
+        known (mesh runs).  Returns self so call sites can chain."""
+        # Lazy imports: configs sit below core in the layering; the
+        # registries are only needed at validation time.
+        from repro.core.estimators import estimator_names, make_estimator
+        from repro.core.samplers import sampler_from_config
+        from repro.sharding.rules import MODES
+
+        def bad(msg: str):
+            raise ValueError(f"ArchConfig '{self.name}': {msg}")
+
+        # One source of truth for sampler names AND family knob combos
+        # (e.g. rff rejecting sampler_proj_rank): the registry constructor.
+        try:
+            smp = sampler_from_config(self)
+        except (KeyError, ValueError) as e:
+            bad(str(e.args[0] if e.args else e))
+        if self.estimator not in estimator_names():
+            bad(f"unknown estimator '{self.estimator}'; "
+                f"have {estimator_names()}")
+        if self.head_impl not in self.HEAD_IMPLS:
+            bad(f"unknown head_impl '{self.head_impl}'; "
+                f"have {list(self.HEAD_IMPLS)}")
+        if self.train_sharding not in MODES:
+            bad(f"unknown train_sharding '{self.train_sharding}'; "
+                f"have {list(MODES)}")
+        if self.sampler == "rff" and (self.rff_dim <= 0 or self.rff_tau <= 0):
+            bad(f"sampler='rff' needs rff_dim > 0 and rff_tau > 0, "
+                f"got rff_dim={self.rff_dim} rff_tau={self.rff_tau}")
+        samples = make_estimator(self.estimator).needs_sampling
+        if samples and not smp.supports_head_loss():
+            bad(f"sampler '{self.sampler}' cannot drive the head loss: it "
+                "neither carries state nor rebuilds from the head table "
+                "(island_state).  Usable head samplers carry state "
+                "(tree/block/rff) or are oracle/uniform families; "
+                "frequency samplers (unigram) are experiment-only — "
+                "construct them via make_sampler directly")
+        if samples and self.m_negatives <= 0:
+            bad(f"m_negatives must be positive, got {self.m_negatives}")
+        if self.sampler_block <= 0:
+            bad(f"sampler_block must be positive, got {self.sampler_block}")
+        if self.sampler_refresh_every <= 0:
+            bad("sampler_refresh_every must be >= 1, got "
+                f"{self.sampler_refresh_every}")
+        if samples and tp > 1 and self.m_negatives % tp:
+            bad(f"m_negatives={self.m_negatives} must divide by the "
+                f"vocab-parallel degree tp={tp} (stratified sampling "
+                "draws m/tp per shard — DESIGN.md §2.5)")
+        if self.microbatches < 1:
+            bad(f"microbatches must be >= 1, got {self.microbatches}")
+        return self
 
     # ---- derived -----------------------------------------------------------
     @property

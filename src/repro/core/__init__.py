@@ -7,21 +7,30 @@ Public API:
   tree             — paper-faithful divide & conquer sampler (§3.2)
   blocks           — TPU-native two-level sampler (DESIGN.md §2.2)
   samplers         — unified sampler registry (uniform/unigram/.../kernel)
+                     + the carried SamplerState pytree protocol (§6.1)
+  estimators       — pluggable loss estimators over the sampled negatives
+                     (sampled-softmax / nce / sampled-logistic / full, §6.2)
   sampled_softmax  — corrected loss (eq. 2-3), absolute softmax, oracles
-  distributed      — vocab-sharded sampler + loss for the TP mesh axis
+  distributed      — vocab-sharded sampler + estimator loss for the TP axis
 """
 from repro.core import (  # noqa: F401
     blocks,
+    estimators,
     hierarchy,
     kernel_fns,
     sampled_softmax,
     samplers,
     tree,
 )
+from repro.core.estimators import make_estimator  # noqa: F401
 from repro.core.kernel_fns import quadratic_kernel, quartic_kernel  # noqa: F401
 from repro.core.sampled_softmax import (  # noqa: F401
     full_softmax_loss,
     sampled_softmax_from_embeddings,
     sampled_softmax_loss,
 )
-from repro.core.samplers import make_sampler  # noqa: F401
+from repro.core.samplers import (  # noqa: F401
+    SamplerState,
+    make_sampler,
+    sampler_from_config,
+)

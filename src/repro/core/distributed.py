@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.estimators import Estimator
 from repro.core.sampled_softmax import transform_logits
 from repro.core.samplers import Sampler
 from repro.kernels import ops
@@ -31,6 +32,14 @@ Array = jax.Array
 
 def local_vocab_offset(n_local: int, axis_name: str) -> Array:
     return lax.axis_index(axis_name) * n_local
+
+
+def local_labels(w_local: Array, labels: Array, axis_name: str) -> Array:
+    """Global label ids -> this shard's local row ids (may be out of range
+    on non-owner shards — only ever compared against LOCAL negative ids,
+    which are in range, so a non-owner shard can never match).  The one
+    implementation of the accidental-hit collision rule's label side."""
+    return labels - local_vocab_offset(w_local.shape[0], axis_name)
 
 
 def sharded_negative_sample(sampler: Sampler, state_local: Any, h: Array,
@@ -95,7 +104,7 @@ def sharded_sampled_softmax_loss(
     pos = transform_logits(
         _positive_logit(w_local, h, labels, axis_name, bias_local), abs_mode)
     # local ids collide with the label iff label - shard offset matches.
-    labels_local = labels - local_vocab_offset(w_local.shape[0], axis_name)
+    labels_local = local_labels(w_local, labels, axis_name)
     log_m = jnp.log(jnp.asarray(m, jnp.float32))
 
     if neg_ids.ndim == 2 and impl != "einsum":
@@ -115,6 +124,33 @@ def sharded_sampled_softmax_loss(
                   + jnp.exp(pos - c))
         return jnp.log(sumexp) + c - pos
 
+    o_adj = _corrected_neg_logits(
+        w_local, h32, labels, neg_ids, logq, m, axis_name=axis_name,
+        abs_mode=abs_mode, bias_local=bias_local,
+        mask_hits=mask_accidental_hits)
+
+    # Numerically stable global logsumexp over [pos, all shards' negatives].
+    # The shift constant needs no gradient (it cancels analytically).
+    local_max = lax.stop_gradient(jnp.max(o_adj, axis=-1))
+    c = lax.pmax(jnp.maximum(local_max, lax.stop_gradient(pos)), axis_name)
+    sumexp_local = jnp.sum(jnp.exp(o_adj - c[:, None]), axis=-1)
+    sumexp = lax.psum(sumexp_local, axis_name) + jnp.exp(pos - c)
+    return jnp.log(sumexp) + c - pos
+
+
+def _corrected_neg_logits(w_local: Array, h32: Array, labels: Array,
+                          neg_ids: Array, logq: Array, m: int, *,
+                          axis_name: str, abs_mode: bool,
+                          bias_local: Array | None,
+                          mask_hits: bool) -> Array:
+    """Shard-local eq.-2-corrected negative logits (T, m_local).
+
+    The one implementation of gather + logit + bias + |.| transform +
+    ``o - logq - ln m`` + accidental-hit masking shared by every estimator's
+    einsum path (a fix to the correction or mask semantics lands here once).
+    Masked slots are -inf: zero mass in the softmax partition AND zero
+    value/gradient under softplus (logistic family).
+    """
     w_neg = w_local[neg_ids].astype(jnp.float32)
     if neg_ids.ndim == 1:  # batch-shared negatives: (m_local, d)
         o_neg = jnp.einsum("td,md->tm", h32, w_neg)
@@ -126,19 +162,64 @@ def sharded_sampled_softmax_loss(
         nb = neg_ids
     if bias_local is not None:
         o_neg = o_neg + bias_local[nb]
-
     # eq. 2 with stratified correction: E[count] = m_local * q_local = m * q~.
-    o_adj = transform_logits(o_neg, abs_mode) - logq_b - log_m
-    if mask_accidental_hits:
+    o_adj = (transform_logits(o_neg, abs_mode) - logq_b
+             - jnp.log(jnp.asarray(m, jnp.float32)))
+    if mask_hits:
+        labels_local = local_labels(w_local, labels, axis_name)
         o_adj = jnp.where(nb == labels_local[:, None], -jnp.inf, o_adj)
+    return o_adj
 
-    # Numerically stable global logsumexp over [pos, all shards' negatives].
-    # The shift constant needs no gradient (it cancels analytically).
-    local_max = lax.stop_gradient(jnp.max(o_adj, axis=-1))
-    c = lax.pmax(jnp.maximum(local_max, lax.stop_gradient(pos)), axis_name)
-    sumexp_local = jnp.sum(jnp.exp(o_adj - c[:, None]), axis=-1)
-    sumexp = lax.psum(sumexp_local, axis_name) + jnp.exp(pos - c)
-    return jnp.log(sumexp) + c - pos
+
+def sharded_estimator_loss(
+    est: Estimator, w_local: Array, h: Array, labels: Array,
+    sampler: Sampler, state_local: Any, m: int, key: Array, *,
+    axis_name: str, abs_mode: bool = False,
+    bias_local: Array | None = None, impl: str = "auto") -> Array:
+    """Estimator-routed vocab-sharded loss (DESIGN.md §6): the shard-local
+    sampling + communication pattern each estimator needs, behind one call.
+
+      sampled-softmax  -> ``sharded_sampled_softmax_loss`` (global corrected
+                          logsumexp: one pmax + two psums of (T,)); the
+                          fused Pallas head keeps the per-example path.
+      nce / sampled-logistic -> the binary-logistic sum decomposes PER SHARD
+                          (no global normalizer), so the only communication
+                          is the positive-logit psum plus one psum of the
+                          (T,) per-shard softplus sums.
+      full             -> ``sharded_full_softmax_loss`` (dense oracle).
+
+    Same contract as sharded_sampled_softmax_loss: returns per-example (T,)
+    losses, negatives drawn stratified m/tp per shard with exact global
+    q~ = q_local / tp (module docstring).
+    """
+    if not est.needs_sampling:
+        return sharded_full_softmax_loss(
+            w_local, h, labels, axis_name=axis_name, abs_mode=abs_mode,
+            bias_local=bias_local)
+    if est.name == "sampled-softmax":
+        return sharded_sampled_softmax_loss(
+            w_local, h, labels, sampler, state_local, m, key,
+            axis_name=axis_name, abs_mode=abs_mode, bias_local=bias_local,
+            impl=impl)
+
+    # Corrected-logistic family: additive across shards.  Explicit
+    # allowlist — a future estimator with its own loss() must grow its own
+    # sharded routing here, not silently inherit the logistic formula
+    # (mesh and mesh=None runs would diverge without an error).
+    if est.name not in ("nce", "sampled-logistic"):
+        raise NotImplementedError(
+            f"estimator '{est.name}' has no sharded routing; add it to "
+            "sharded_estimator_loss")
+    neg_ids, logq = sharded_negative_sample(sampler, state_local, h, m, key,
+                                            axis_name)
+    pos = transform_logits(
+        _positive_logit(w_local, h, labels, axis_name, bias_local), abs_mode)
+    o_adj = _corrected_neg_logits(
+        w_local, h.astype(jnp.float32), labels, neg_ids, logq, m,
+        axis_name=axis_name, abs_mode=abs_mode, bias_local=bias_local,
+        mask_hits=est.masks_hits)
+    neg_sum = lax.psum(jnp.sum(jax.nn.softplus(o_adj), axis=-1), axis_name)
+    return jax.nn.softplus(-pos) + neg_sum
 
 
 def sharded_full_softmax_loss(w_local: Array, h: Array, labels: Array, *,

@@ -71,6 +71,34 @@ def sampled_softmax_loss(pos_logit: Array, neg_logits: Array, logq: Array,
     return jax.nn.logsumexp(all_logits, axis=-1) - pos
 
 
+def gather_pos_neg_logits(w: Array, h: Array, labels: Array, neg_ids: Array,
+                          logq: Array, bias: Array | None = None
+                          ) -> tuple[Array, Array, Array, Array]:
+    """Raw (pos_logit (T,), neg_logits (T, m), logq (T, m), hit (T, m)).
+
+    The one local (unsharded) gather + einsum + hit-detection + bias block
+    every estimator's einsum path shares — shared ``(m,)`` negatives are
+    broadcast to per-example shape here (the sharded analogue is
+    ``distributed._corrected_neg_logits``).
+    """
+    h = h.astype(jnp.float32)
+    w_pos = w[labels].astype(jnp.float32)  # (T, d)
+    pos_logit = jnp.einsum("td,td->t", h, w_pos)
+    if neg_ids.ndim == 1:  # shared negatives
+        w_neg = w[neg_ids].astype(jnp.float32)  # (m, d)
+        neg_logits = jnp.einsum("td,md->tm", h, w_neg)
+        logq = jnp.broadcast_to(logq[None, :], neg_logits.shape)
+        hit = neg_ids[None, :] == labels[:, None]
+    else:
+        w_neg = w[neg_ids].astype(jnp.float32)  # (T, m, d)
+        neg_logits = jnp.einsum("td,tmd->tm", h, w_neg)
+        hit = neg_ids == labels[:, None]
+    if bias is not None:
+        pos_logit = pos_logit + bias[labels]
+        neg_logits = neg_logits + bias[neg_ids]
+    return pos_logit, neg_logits, logq, hit
+
+
 def sampled_softmax_from_embeddings(
     w: Array, h: Array, labels: Array, neg_ids: Array, logq: Array,
     *, abs_mode: bool = False, bias: Array | None = None,
@@ -92,21 +120,8 @@ def sampled_softmax_from_embeddings(
         return _fused_from_embeddings(
             w, h, labels, neg_ids, logq, abs_mode=abs_mode, bias=bias,
             mask_accidental_hits=mask_accidental_hits, impl=impl)
-    h = h.astype(jnp.float32)
-    w_pos = w[labels].astype(jnp.float32)  # (T, d)
-    pos_logit = jnp.einsum("td,td->t", h, w_pos)
-    if neg_ids.ndim == 1:  # shared negatives
-        w_neg = w[neg_ids].astype(jnp.float32)  # (m, d)
-        neg_logits = jnp.einsum("td,md->tm", h, w_neg)
-        logq = jnp.broadcast_to(logq[None, :], neg_logits.shape)
-        hit = neg_ids[None, :] == labels[:, None]
-    else:
-        w_neg = w[neg_ids].astype(jnp.float32)  # (T, m, d)
-        neg_logits = jnp.einsum("td,tmd->tm", h, w_neg)
-        hit = neg_ids == labels[:, None]
-    if bias is not None:
-        pos_logit = pos_logit + bias[labels]
-        neg_logits = neg_logits + bias[neg_ids]
+    pos_logit, neg_logits, logq, hit = gather_pos_neg_logits(
+        w, h, labels, neg_ids, logq, bias)
     return sampled_softmax_loss(
         pos_logit, neg_logits, logq, abs_mode=abs_mode,
         hit_mask=hit if mask_accidental_hits else None)

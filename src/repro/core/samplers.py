@@ -1,12 +1,25 @@
 """Unified negative-sampler interface + all distributions studied in the paper.
 
-Samplers are stateless objects; their mutable statistics live in an explicit
-pytree ``state`` so everything jits/vmaps/shards cleanly:
+Samplers are stateless objects; their mutable statistics live in explicit
+pytrees so everything jits/vmaps/shards cleanly.  Two state forms exist:
 
-    state = sampler.init(key, w)
-    state = sampler.refresh(state, w)          # adapt to current parameters
-    ids, logq = sampler.sample(state, h, m, key)        # one query  (m,)
-    ids, logq = sampler.sample_batch(state, H, m, key)  # (T, m) or shared (m,)
+  * the RUNTIME state — whatever ``sample``/``sample_batch`` consume —
+    produced by ``init``/``refresh`` (single-host experiments, tests,
+    benchmarks):
+
+        state = sampler.init(key, w)
+        state = sampler.refresh(state, w)      # adapt to current parameters
+        ids, logq = sampler.sample(state, h, m, key)        # one query (m,)
+        ids, logq = sampler.sample_batch(state, H, m, key)  # (T,m)/shared(m,)
+
+  * the CARRIED state — a single self-describing ``SamplerState`` pytree of
+    heap-packed arrays that the train step stores in ``TrainState``,
+    checkpoints, and shards P('model') over the vocab axis.  The sampler
+    itself declares the carried arrays' abstract shapes and sharding specs
+    (``state_shapes`` / ``state_specs``), builds them from a head shard
+    (``build_stats``), and rehydrates them into runtime form
+    (``hydrate``) — so the train island, checkpointing, and the dry-run
+    never enumerate per-family array layouts (DESIGN.md §6).
 
 ``logq`` is always the EXACT log-probability under the distribution actually
 sampled from — that is what eq. 2 needs, and it is what keeps stale statistics
@@ -52,16 +65,51 @@ from repro.core.kernel_fns import (
     rff_directions,
     rff_kernel,
 )
+from repro.utils.misc import next_pow2
 
 Array = jax.Array
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SamplerState:
+    """The carried sampler state: ONE pytree, owned by the sampler.
+
+    ``stats`` — adaptive statistics rebuilt on the refresh cadence
+    (heap-packed Gram levels, feature sums, leaf tables, ...), sharded
+    P('model') over their leading (vocab) axis on a mesh.
+    ``const`` — run-lifetime constants drawn once at init and never
+    refreshed (the JL projection ``proj``, the RFF direction matrix
+    ``omega``), replicated.
+
+    Both are flat ``{name: array}`` dicts whose keys are private to the
+    sampler family; everything outside the sampler (TrainState, the
+    checkpoint manager, the dry-run, the dist scripts) treats the whole
+    object as an opaque pytree.  Non-carrying samplers (uniform, the
+    oracles) use the empty state — a valid, leafless pytree.
+    """
+
+    stats: dict[str, Array]
+    const: dict[str, Array]
+
+    def replace_stats(self, stats: dict[str, Array]) -> "SamplerState":
+        return SamplerState(stats=stats, const=self.const)
+
+
+def empty_state() -> SamplerState:
+    return SamplerState(stats={}, const={})
+
+
 class Sampler:
-    """Base class; subclasses override init/refresh/sample."""
+    """Base class; subclasses override init/refresh/sample (runtime form)
+    and — for train-island citizens — the carried-state protocol."""
 
     name: str = "base"
     #: True when sample_batch returns one shared (m,) set instead of (T, m).
     shares_negatives: bool = False
+    #: True when the train step carries + refreshes this sampler's
+    #: statistics in TrainState (block/tree/rff families).
+    carries_state: bool = False
 
     def init(self, key: Array, w: Array) -> Any:
         raise NotImplementedError
@@ -78,6 +126,94 @@ class Sampler:
         keys = jax.random.split(key, h.shape[0])
         return jax.vmap(lambda hh, kk: self.sample(state, hh, m, kk))(h, keys)
 
+    # --- carried-state protocol (DESIGN.md §6) ------------------------------
+    # Default implementation: the empty state.  Carrying samplers override
+    # build_stats/hydrate/state_shapes/state_specs (+ init_const when they
+    # own a projection-like constant).
+
+    def init_const(self, key: Array, d: int) -> dict[str, Array]:
+        """Run-lifetime constants (projection / omega); ``d`` = head width."""
+        return {}
+
+    def init_state(self, key: Array, w: Array, *,
+                   n_valid: Array | int | None = None) -> SamplerState:
+        """Carried state built from a full head table (concrete init)."""
+        if not self.carries_state:
+            return empty_state()
+        if n_valid is None:
+            n_valid = jnp.asarray(w.shape[0], jnp.int32)
+        const = self.init_const(key, w.shape[1])
+        return SamplerState(stats=self.build_stats(w, n_valid, const),
+                            const=const)
+
+    def build_stats(self, w: Array, n_valid, const: dict[str, Array]
+                    ) -> dict[str, Array]:
+        """Fresh carried statistics from a (local) head table.  Runs inside
+        the refresh island on a mesh — w is the shard's gathered rows."""
+        raise TypeError(f"sampler '{self.name}' carries no statistics")
+
+    def hydrate(self, state: SamplerState, n_valid) -> Any:
+        """Carried pytree -> the runtime state ``sample_batch`` consumes."""
+        if not self.carries_state:
+            raise TypeError(
+                f"sampler '{self.name}' carries no statistics; island state "
+                "comes from island_state(head, n_valid)")
+        raise NotImplementedError
+
+    def state_shapes(self, cfg, tp: int) -> SamplerState:
+        """GLOBAL abstract shapes of the carried arrays, as a SamplerState
+        of jax.ShapeDtypeStruct (no shardings attached)."""
+        if not self.carries_state:
+            return empty_state()
+        raise NotImplementedError
+
+    def state_specs(self, cfg, tp: int, axis: str = "model") -> SamplerState:
+        """PartitionSpec per carried array (matching state_shapes): stats
+        shard P(axis) over their leading vocab-heap axis (the top tree
+        levels ARE the TP axis — DESIGN.md §2.5), constants replicate.
+        The single source of truth the train step, the dry-run and the
+        checkpoint layout consume."""
+        from jax.sharding import PartitionSpec as P
+
+        shapes = self.state_shapes(cfg, tp)
+        return SamplerState(
+            stats={k: P(axis) for k in shapes.stats},
+            const={k: P() for k in shapes.const})
+
+    def island_state(self, head_full: Array, n_valid) -> Any:
+        """Runtime state for NON-carrying samplers inside the train island,
+        rebuilt from the gathered head shard every step."""
+        raise TypeError(
+            f"sampler '{self.name}' is unsupported in the train island")
+
+    def supports_head_loss(self) -> bool:
+        """True when the train island / SoftmaxHead.loss can drive this
+        sampler: it either carries state or overrides island_state.
+        ``ArchConfig.validate`` uses this to fail at construction instead
+        of with a trace-time TypeError."""
+        return (self.carries_state
+                or type(self).island_state is not Sampler.island_state)
+
+
+def _head_dims(cfg, tp: int) -> tuple[int, int]:
+    """(vocab rows per shard, head width d).
+
+    Model-layer helpers are imported lazily: the dependency is cfg-only
+    (padded vocab + hidden width), and core must stay importable without
+    the model package at module-import time."""
+    from repro.models import api as model_api
+    from repro.models.transformer import padded_vocab
+
+    return padded_vocab(cfg, tp) // tp, model_api.hidden_width(cfg)
+
+
+def _tree_dims(cfg, tp: int, leaf_size: int) -> tuple[int, int, int]:
+    """(leaves per shard, padded leaf size, heap rows per shard)."""
+    v_l, _ = _head_dims(cfg, tp)
+    leaf = next_pow2(leaf_size)
+    num_leaves_l = next_pow2(max(1, -(-v_l // leaf)))
+    return num_leaves_l, leaf, hierarchy.heap_rows(num_leaves_l)
+
 
 @dataclasses.dataclass(frozen=True)
 class UniformSampler(Sampler):
@@ -91,6 +227,14 @@ class UniformSampler(Sampler):
         ids = jax.random.randint(key, (m,), 0, n, dtype=jnp.int32)
         logq = -jnp.log(jnp.asarray(n, jnp.float32))
         return ids, jnp.full((m,), 1.0) * logq
+
+    def island_state(self, head_full, n_valid):
+        # Sample over the VALID rows only: drawing over the padded shard
+        # rows would put q-mass on padding (and report logq over the
+        # padded count) — a small but real eq.-2 bias whenever vocab_size
+        # doesn't divide the shard size.  The max(1) guards the degenerate
+        # all-padding shard (never hit when vocab_size >= tp).
+        return {"n": jnp.maximum(n_valid, 1)}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,6 +310,9 @@ class LogitOracleSampler(Sampler):
         ids = jax.random.categorical(key, logq, shape=(m,)).astype(jnp.int32)
         return ids, logq[ids]
 
+    def island_state(self, head_full, n_valid):
+        return {"w": head_full, "n_valid": n_valid}
+
 
 def softmax_oracle() -> LogitOracleSampler:
     return LogitOracleSampler(score_fn=jnp.exp, name="softmax")
@@ -202,6 +349,45 @@ class TreeSampler(Sampler):
     leaf_size: int | None = None
     proj_rank: int | None = None
     name: str = "tree-quadratic"
+    carries_state = True
+
+    def _carried_leaf(self, n: int, d: int) -> int:
+        if self.leaf_size is not None:
+            return self.leaf_size
+        return max(2, min(n, self.proj_rank or d))
+
+    def init_const(self, key, d):
+        if self.proj_rank is None:
+            return {}
+        return {"proj": blocks.make_projection(key, d, self.proj_rank)}
+
+    def build_stats(self, w, n_valid, const):
+        hs = hierarchy.build(
+            w, next_pow2(self._carried_leaf(*w.shape)),
+            proj=const.get("proj"), n_valid=n_valid, full_tree=True)
+        z, cnt = hierarchy.to_heap(hs)
+        return {"z": z, "cnt": cnt, "wq": hs.wq}
+
+    def hydrate(self, state, n_valid):
+        st = state.stats
+        return {"stats": hierarchy.from_heap(st["z"], st["cnt"], st["wq"],
+                                             n_valid),
+                "proj": state.const.get("proj")}
+
+    def state_shapes(self, cfg, tp):
+        v_l, d = _head_dims(cfg, tp)
+        r = self.proj_rank or d
+        # leaf fallback resolves against the SHARD-LOCAL row count — the
+        # same n build_stats sees inside the refresh island.
+        num_leaves_l, leaf, rows = _tree_dims(
+            cfg, tp, self._carried_leaf(v_l, d))
+        sds = jax.ShapeDtypeStruct
+        stats = {"z": sds((tp * rows, r, r), jnp.float32),
+                 "cnt": sds((tp * rows,), jnp.float32),
+                 "wq": sds((tp * num_leaves_l, leaf, r), jnp.float32)}
+        const = ({"proj": sds((self.proj_rank, d), jnp.float32)}
+                 if self.proj_rank else {})
+        return SamplerState(stats=stats, const=const)
 
     def init(self, key, w):
         proj = None
@@ -244,10 +430,39 @@ class BlockSampler(Sampler):
     proj_rank: int | None = None
     shared: bool = False
     name: str = "block-quadratic"
+    carries_state = True
 
     @property
     def shares_negatives(self) -> bool:  # type: ignore[override]
         return self.shared
+
+    def init_const(self, key, d):
+        if self.proj_rank is None:
+            return {}
+        return {"proj": blocks.make_projection(key, d, self.proj_rank)}
+
+    def build_stats(self, w, n_valid, const):
+        s = blocks.build(w, self.block_size, const.get("proj"), n_valid)
+        return {"z": s.z, "cnt": s.cnt, "wq": s.wq}
+
+    def hydrate(self, state, n_valid):
+        st = state.stats
+        return {"stats": blocks.BlockStats(st["z"], st["cnt"], st["wq"],
+                                           n_valid),
+                "proj": state.const.get("proj")}
+
+    def state_shapes(self, cfg, tp):
+        v_l, d = _head_dims(cfg, tp)
+        r = self.proj_rank or d
+        bs = self.block_size
+        n_blocks_l = -(-v_l // bs)
+        sds = jax.ShapeDtypeStruct
+        stats = {"z": sds((tp * n_blocks_l, r, r), jnp.float32),
+                 "cnt": sds((tp * n_blocks_l,), jnp.float32),
+                 "wq": sds((tp * n_blocks_l, bs, r), jnp.float32)}
+        const = ({"proj": sds((self.proj_rank, d), jnp.float32)}
+                 if self.proj_rank else {})
+        return SamplerState(stats=stats, const=const)
 
     def init(self, key, w):
         proj = None
@@ -308,6 +523,9 @@ class FeatureOracleSampler(Sampler):
         ids = jax.random.categorical(key, logq, shape=(m,)).astype(jnp.int32)
         return ids, logq[ids]
 
+    def island_state(self, head_full, n_valid):
+        return {"w": head_full, "n_valid": n_valid}
+
 
 def rff_oracle(dim: int = 512, tau: float = 1.0,
                seed: int = 0) -> FeatureOracleSampler:
@@ -333,12 +551,50 @@ class RFFSampler(Sampler):
     tau: float = 1.0
     leaf_size: int | None = None
     name: str = "rff"
+    carries_state = True
 
-    def _leaf(self, w) -> int:
+    def init_const(self, key, d):
+        # omega plays the projection role: fixed Gaussian directions, drawn
+        # once, replicated, carried for the lifetime of the run.
+        return {"omega": rff_directions(key, self.dim, d)}
+
+    def build_stats(self, w, n_valid, const):
+        fs = hierarchy.build_features(
+            w, next_pow2(self._leaf_size(*w.shape)), const["omega"],
+            self.tau, n_valid=n_valid)
+        f, aux = hierarchy.to_feature_heap(fs)
+        return {"features": f, "aux": aux, "wq": fs.wq}
+
+    def hydrate(self, state, n_valid):
+        st = state.stats
+        return {"stats": hierarchy.from_feature_heap(
+                    st["features"], st["aux"], st["wq"], n_valid),
+                "proj": state.const["omega"]}
+
+    def state_shapes(self, cfg, tp):
+        v_l, d = _head_dims(cfg, tp)
+        # Same fallback as build_stats, against the SHARD-LOCAL row count
+        # the refresh island sees.
+        num_leaves_l, leaf, rows = _tree_dims(cfg, tp,
+                                              self._leaf_size(v_l, d))
+        sds = jax.ShapeDtypeStruct
+        return SamplerState(
+            stats={"features": sds((tp * rows, self.dim), jnp.float32),
+                   "aux": sds((tp * rows,), jnp.float32),
+                   "wq": sds((tp * num_leaves_l, leaf, d), jnp.float32)},
+            const={"omega": sds((self.dim, d), jnp.float32)})
+
+    def _leaf_size(self, n: int, d: int) -> int:
+        """ONE fallback formula for both build_stats and state_shapes —
+        a drift between them is a declared-vs-built shape mismatch that
+        only surfaces at shard_map trace time."""
         if self.leaf_size is not None:
             return self.leaf_size
         # Stop splitting once exact leaf scoring costs what a level does.
-        return max(2, min(w.shape[0], w.shape[1]))
+        return max(2, min(n, d))
+
+    def _leaf(self, w) -> int:
+        return self._leaf_size(*w.shape)
 
     def init(self, key, w):
         omega = rff_directions(key, self.dim, w.shape[1])
@@ -376,23 +632,91 @@ class RFFSampler(Sampler):
                                           self.tau, h, keys)
 
 
-_REGISTRY: dict[str, Callable[..., Sampler]] = {
-    "uniform": UniformSampler,
-    "unigram": UnigramSampler,
-    "bigram": BigramSampler,
-    "softmax": softmax_oracle,
-    "abs-softmax": abs_softmax_oracle,
-    "quadratic-oracle": quadratic_oracle,
-    "quartic-oracle": quartic_oracle,
-    "tree-quadratic": TreeSampler,
-    "block-quadratic": BlockSampler,
-    "block-quadratic-shared": partial(BlockSampler, shared=True),
-    "rff": RFFSampler,
-    "rff-oracle": rff_oracle,
+# --- registry ----------------------------------------------------------------
+# One source of truth for sampler construction: each family pairs its
+# keyword constructor with the cfg-aware construction the train island and
+# the repro.api facade use (previously duplicated in train/step.py).
+
+
+def _block_from_cfg(cfg, shared: bool) -> Sampler:
+    return BlockSampler(kernel=quadratic_kernel(cfg.sampler_alpha),
+                        block_size=cfg.sampler_block,
+                        proj_rank=cfg.sampler_proj_rank, shared=shared)
+
+
+def _tree_from_cfg(cfg) -> Sampler:
+    return TreeSampler(kernel=quadratic_kernel(cfg.sampler_alpha),
+                       leaf_size=cfg.sampler_block,
+                       proj_rank=cfg.sampler_proj_rank)
+
+
+def _rff_from_cfg(cfg) -> Sampler:
+    if cfg.sampler_proj_rank:
+        raise ValueError(
+            "sampler='rff' ignores sampler_proj_rank — omega (rff_dim, d) "
+            "IS the projection; set sampler_proj_rank=None")
+    return RFFSampler(dim=cfg.rff_dim, tau=cfg.rff_tau,
+                      leaf_size=cfg.sampler_block)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Family:
+    ctor: Callable[..., Sampler]
+    #: cfg -> Sampler; None means plain ``ctor()`` (no cfg-derived knobs).
+    from_cfg: Callable[..., Sampler] | None = None
+
+
+_REGISTRY: dict[str, _Family] = {
+    "uniform": _Family(UniformSampler),
+    "unigram": _Family(UnigramSampler),
+    "softmax": _Family(softmax_oracle),
+    "abs-softmax": _Family(abs_softmax_oracle),
+    "quadratic-oracle": _Family(
+        quadratic_oracle, lambda cfg: quadratic_oracle(cfg.sampler_alpha)),
+    "quartic-oracle": _Family(quartic_oracle),
+    "rff-oracle": _Family(rff_oracle),
+    "tree-quadratic": _Family(TreeSampler, _tree_from_cfg),
+    "block-quadratic": _Family(
+        BlockSampler, partial(_block_from_cfg, shared=False)),
+    "block-quadratic-shared": _Family(
+        partial(BlockSampler, shared=True),
+        partial(_block_from_cfg, shared=True)),
+    "rff": _Family(RFFSampler, _rff_from_cfg),
+}
+
+#: registered families that do NOT satisfy the shared Sampler protocol.
+#: BigramSampler conditions on a discrete context id, not a hidden vector —
+#: ``sample(state, h, m, key)`` has no meaning for it; construct it
+#: directly and call ``sample_ctx(state, prev_id, m, key)``.
+_EXCLUDED: dict[str, str] = {
+    "bigram": "BigramSampler does not satisfy the Sampler protocol: it "
+              "conditions on a discrete previous-class id, not a hidden "
+              "vector.  Construct BigramSampler() directly and use "
+              "sample_ctx(state, prev_id, m, key).",
 }
 
 
-def make_sampler(name: str, **kwargs) -> Sampler:
+def sampler_names() -> list[str]:
+    """Names accepted by make_sampler / cfg.sampler."""
+    return sorted(_REGISTRY)
+
+
+def _lookup(name: str) -> _Family:
+    if name in _EXCLUDED:
+        raise ValueError(_EXCLUDED[name])
     if name not in _REGISTRY:
         raise KeyError(f"unknown sampler '{name}'; have {sorted(_REGISTRY)}")
-    return _REGISTRY[name](**kwargs)
+    return _REGISTRY[name]
+
+
+def make_sampler(name: str, **kwargs) -> Sampler:
+    return _lookup(name).ctor(**kwargs)
+
+
+def sampler_from_config(cfg) -> Sampler:
+    """The cfg-aware constructor the train step and repro.api use.
+
+    Every knob a family reads from ArchConfig is resolved here — one
+    source of truth (was duplicated as train/step.py::sampler_from_cfg)."""
+    fam = _lookup(cfg.sampler)
+    return fam.from_cfg(cfg) if fam.from_cfg is not None else fam.ctor()

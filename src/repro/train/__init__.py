@@ -1,6 +1,8 @@
 from repro.train.step import (  # noqa: F401
     TrainState,
-    make_train_step,
+    abstract_train_state,
+    export_retrieval_index,
     init_train_state,
+    make_train_step,
     sampler_from_cfg,
 )

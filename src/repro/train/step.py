@@ -5,15 +5,22 @@ Data flow per step (LM example, production mesh):
   tokens (B,S) --DP--> backbone --> h (B,S,d)  [activations data-sharded]
   h flattened  --> shard_map island over the FULL mesh:
         head shard (vocab/tp, d/fsdp) --all-gather(fsdp)--> (vocab/tp, d)
-        block stats refresh (Gram matmul)  |  or carried stats (stale OK)
+        sampler-state refresh (one Gram/feature matmul)  |  or carried
+            state (stale OK)
         stratified kernel sampling: m/tp negatives per shard   [paper §3.2,
             top tree levels = TP axis, DESIGN.md §2.5]
-        corrected sampled softmax, global logsumexp via psum   [eq. 2-3;
-            accidental hits masked, per-example negatives through the
-            fused head kernel per cfg.head_impl — DESIGN.md §4]
+        estimator-routed corrected loss, global combine via psum  [eq. 2-3
+            for the default sampled-softmax estimator; accidental hits
+            masked, per-example negatives through the fused head kernel
+            per cfg.head_impl — DESIGN.md §4/§6]
   loss --> value_and_grad --> optimizer (clip + AdamW/Adafactor)
 
-The sampler's statistics are carried in TrainState and refreshed on a cadence
+Sampler statistics are carried in ``TrainState.sampler_state`` — ONE
+self-describing ``SamplerState`` pytree whose array layout, abstract shapes
+and sharding specs are declared by the sampler itself
+(``Sampler.state_shapes`` / ``state_specs`` — DESIGN.md §6).  This module
+never enumerates per-family arrays; adding a sampler family touches
+``core/samplers.py`` only.  The state refreshes on a cadence
 (cfg.sampler_refresh_every); the correction always uses the statistics that
 were actually sampled from, so staleness costs bias-of-q only, never
 correctness of the estimator (DESIGN.md §2.4).
@@ -25,36 +32,29 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.core import blocks, distributed, hierarchy, tree
-from repro.core.kernel_fns import (
-    quadratic_kernel,
-    quartic_kernel,
-    rff_directions,
-)
-from repro.core.sampled_softmax import sampled_softmax_from_embeddings
+from repro.core import distributed, estimators
 from repro.core.samplers import (
-    BlockSampler,
-    LogitOracleSampler,
-    RFFSampler,
-    Sampler,
-    TreeSampler,
-    UniformSampler,
-    make_sampler,
+    SamplerState,
+    empty_state,
+    sampler_from_config,
 )
 from repro.models import api
 from repro.models.transformer import padded_vocab
 from repro.optim.transform import GradientTransform, apply_updates
 from repro.sharding.rules import ShardCtx, param_specs_for
 from repro.utils.compat import shard_map
-from repro.utils.misc import next_pow2
 
 Array = jax.Array
+
+#: kept name: the cfg-aware sampler constructor now lives in the registry
+#: (core/samplers.py — one source of truth; this alias preserves the old
+#: train-island spelling).
+sampler_from_cfg = sampler_from_config
 
 
 @jax.tree_util.register_dataclass
@@ -62,199 +62,88 @@ Array = jax.Array
 class TrainState:
     """Carried training state.
 
-    The sampler statistics triple is laid out per sampler family, always
-    sharded P('model') over the leading axis:
-      block:  z (tp * n_blocks_l, r, r), cnt (tp * n_blocks_l,),
-              wq (tp * n_blocks_l, B, r)
-      tree:   z/cnt are the heap-packed per-level Gram stats
-              (tp * 2*L_l, r, r) / (tp * 2*L_l,)  [hierarchy.to_heap], and
-              wq (tp * L_l, leaf, r) the per-shard leaf table — the top
-              log2(tp) tree levels ARE the TP axis (DESIGN.md §2.5).
-      rff:    z is the heap-packed per-level FEATURE sums (tp * 2*L_l, D)
-              and cnt the aux heap (counts + per-shard logshift in the pad
-              row) [hierarchy.to_feature_heap]; wq (tp * L_l, leaf, d) holds
-              RAW rows (exact exp-kernel leaf scoring) and ``proj`` carries
-              the fixed direction matrix omega (D, d) (DESIGN.md §2.7).
+    ``sampler_state`` is the sampler-owned ``SamplerState`` pytree
+    (statistics + run-lifetime constants).  Its per-family array layout is
+    documented where it is defined — ``core/samplers.py`` — not here; this
+    struct, the checkpoint manager and the dry-run treat it as opaque.
+    Statistics leaves ride sharded P('model') over their leading vocab-heap
+    axis, constants replicated (``Sampler.state_specs``).
     """
 
     params: Any
     opt_state: Any
-    sampler_z: Array | None      # see layout note above   P('model')
-    sampler_cnt: Array | None    # see layout note above   P('model')
-    sampler_wq: Array | None     # see layout note above   P('model')
-    proj: Array | None           # (r, d) replicated; None = unprojected
+    sampler_state: SamplerState
     step: Array                  # () int32
 
 
-def sampler_from_cfg(cfg: ArchConfig) -> Sampler:
-    name = cfg.sampler
-    if name.startswith("block-quadratic"):
-        return make_sampler(
-            name,
-            kernel=quadratic_kernel(cfg.sampler_alpha),
-            block_size=cfg.sampler_block,
-            proj_rank=cfg.sampler_proj_rank,
-        )
-    if name == "tree-quadratic":
-        return make_sampler(
-            name,
-            kernel=quadratic_kernel(cfg.sampler_alpha),
-            leaf_size=cfg.sampler_block,
-            proj_rank=cfg.sampler_proj_rank,
-        )
-    if name == "quadratic-oracle":
-        return make_sampler(name, alpha=cfg.sampler_alpha)
-    if name == "rff":
-        assert not cfg.sampler_proj_rank, (
-            "sampler='rff' ignores sampler_proj_rank — omega (rff_dim, d) "
-            "IS the projection; set sampler_proj_rank=None")
-        return make_sampler(name, dim=cfg.rff_dim, tau=cfg.rff_tau,
-                            leaf_size=cfg.sampler_block)
-    return make_sampler(name)
-
-
-def _sampler_dims(cfg: ArchConfig, tp: int) -> tuple[int, int, int]:
-    """(rows per shard, blocks per shard, sampling rank r)."""
-    nvp = padded_vocab(cfg, tp)
-    v_l = nvp // tp
-    bs = cfg.sampler_block
-    n_blocks_l = -(-v_l // bs)
-    r = cfg.sampler_proj_rank or api.hidden_width(cfg)
-    return v_l, n_blocks_l, r
-
-
-def _tree_dims(cfg: ArchConfig, tp: int) -> tuple[int, int, int, int]:
-    """(rows per shard, leaves per shard, leaf size, sampling rank r)."""
-    v_l, _, r = _sampler_dims(cfg, tp)
-    leaf = next_pow2(cfg.sampler_block)
-    num_leaves_l = next_pow2(max(1, -(-v_l // leaf)))
-    return v_l, num_leaves_l, leaf, r
-
-
-def _stat_shapes(cfg: ArchConfig, sampler: Sampler, tp: int
-                 ) -> tuple[tuple, tuple, tuple]:
-    """Global shapes of the carried (z, cnt, wq) triple (sharded P('model'))."""
-    if isinstance(sampler, RFFSampler):
-        _, num_leaves_l, leaf, d = _tree_dims(cfg, tp)
-        rows = hierarchy.heap_rows(num_leaves_l)
-        return ((tp * rows, cfg.rff_dim), (tp * rows,),
-                (tp * num_leaves_l, leaf, d))
-    if isinstance(sampler, TreeSampler):
-        _, num_leaves_l, leaf, r = _tree_dims(cfg, tp)
-        rows = hierarchy.heap_rows(num_leaves_l)
-        return ((tp * rows, r, r), (tp * rows,), (tp * num_leaves_l, leaf, r))
-    _, n_blocks_l, r = _sampler_dims(cfg, tp)
-    bs = cfg.sampler_block
-    return ((tp * n_blocks_l, r, r), (tp * n_blocks_l,),
-            (tp * n_blocks_l, bs, r))
-
-
-def _build_stat_arrays(sampler: Sampler, cfg: ArchConfig, head_full: Array,
-                       n_valid, proj) -> tuple[Array, Array, Array]:
-    """Fresh (z, cnt, wq) carry arrays from the gathered local head shard.
-
-    For the rff family ``proj`` is the direction matrix omega (D, d)."""
-    if isinstance(sampler, RFFSampler):
-        fs = hierarchy.build_features(head_full, next_pow2(cfg.sampler_block),
-                                      proj, sampler.tau, n_valid=n_valid)
-        f, aux = hierarchy.to_feature_heap(fs)
-        return f, aux, fs.wq
-    if isinstance(sampler, TreeSampler):
-        hs = hierarchy.build(head_full, next_pow2(cfg.sampler_block),
-                             proj=proj, n_valid=n_valid, full_tree=True)
-        z, cnt = hierarchy.to_heap(hs)
-        return z, cnt, hs.wq
-    stats = blocks.build(head_full, cfg.sampler_block, proj, n_valid)
-    return stats.z, stats.cnt, stats.wq
-
-
-def _stats_from_arrays(sampler: Sampler, z, cnt, wq, n_valid):
-    """Rehydrate the carried (z, cnt, wq) triple into sampler statistics."""
-    if isinstance(sampler, RFFSampler):
-        return hierarchy.from_feature_heap(z, cnt, wq, n_valid)
-    if isinstance(sampler, TreeSampler):
-        return hierarchy.from_heap(z, cnt, wq, n_valid)
-    return blocks.BlockStats(z, cnt, wq, n_valid)
-
-
-def _local_stats(sampler: Sampler, cfg: ArchConfig, head_full: Array,
-                 z, cnt, wq, n_valid, proj, refresh: Array | None):
-    """Local sampler state for the island.  For block/tree/rff samplers,
-    either rebuild from the gathered head or reuse carried stats."""
-    if isinstance(sampler, (BlockSampler, TreeSampler, RFFSampler)):
-        new = _build_stat_arrays(sampler, cfg, head_full, n_valid, proj)
-        if refresh is None or z is None:
-            z, cnt, wq = new
-        else:
-            z, cnt, wq = jax.tree_util.tree_map(
-                lambda a, b: jnp.where(refresh, a, b), new, (z, cnt, wq))
-        stats = _stats_from_arrays(sampler, z, cnt, wq, n_valid)
-        return {"stats": stats, "proj": proj}, (z, cnt, wq)
-    if isinstance(sampler, UniformSampler):
-        return {"n": head_full.shape[0]}, None
-    if isinstance(sampler, LogitOracleSampler):
-        return {"w": head_full, "n_valid": n_valid}, None
-    raise TypeError(f"sampler {sampler.name} unsupported in the train island")
+def _merge_refresh(new: dict, keep: dict, refresh: Array) -> dict:
+    return jax.tree_util.tree_map(
+        lambda a_, b_: jnp.where(refresh, a_, b_), new, keep)
 
 
 def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
                     aux_coef: float = 0.01
                     ) -> Callable[[TrainState, dict, Array],
                                   tuple[TrainState, dict]]:
-    sampler = sampler_from_cfg(cfg)
+    cfg.validate(tp=ctx.tp)
+    sampler = sampler_from_config(cfg)
+    estimator = estimators.make_estimator(cfg.estimator)
     mesh = ctx.mesh
     tp = ctx.tp
     m = cfg.m_negatives
     dataspec = ctx.batch_spec() if ctx.mesh is not None else None
     head_fsdp = (ctx.data_spec() if ctx.mesh is not None else None)
     pure_fsdp = ctx.mode == "pure_fsdp"
-    v_l, n_blocks_l, r = _sampler_dims(cfg, tp)
+    v_l = padded_vocab(cfg, tp) // tp  # head rows per vocab shard
 
-    carries_stats = isinstance(sampler, (BlockSampler, TreeSampler,
-                                         RFFSampler))
-    # rff always rides a projection-shaped carry: omega (D, d) in state.proj.
-    carries_proj = bool(cfg.sampler_proj_rank) or isinstance(sampler,
-                                                             RFFSampler)
+    carries_stats = sampler.carries_state and estimator.needs_sampling
     mdl = ctx.model_axis
+    # Specs must mirror the init gating: a dense estimator (estimator.
+    # needs_sampling False) carries an EMPTY state even for a carrying
+    # sampler, and the shard_map in_specs must match that empty pytree.
+    specs = (sampler.state_specs(cfg, tp, axis=mdl) if carries_stats
+             else empty_state())
+
+    def _local_state(sampler_state: SamplerState, head_full, n_valid):
+        """Runtime sampling state inside the island (either hydrated from
+        the carried pytree or rebuilt from the gathered head)."""
+        if carries_stats:
+            return sampler.hydrate(sampler_state, n_valid)
+        return sampler.island_state(lax.stop_gradient(head_full), n_valid)
 
     # --- stats refresh (no gradients; runs once per step, before the
     # microbatch loop, so all microbatches sample from the SAME q) ----------
-    def _merge_refresh(new, keep, refresh):
-        return jax.tree_util.tree_map(
-            lambda a_, b_: jnp.where(refresh, a_, b_), new, keep)
-
-    def refresh_island(head, z, cnt, wq, proj, refresh):
-        proj_l = proj if carries_proj else None
+    def refresh_island(head, stats, const, refresh):
         my = lax.axis_index(mdl)
         head_full = head  # gather the Fd-sharded feature dim
         for a in ctx.data_axes[::-1]:
             head_full = lax.all_gather(head_full, a, axis=1, tiled=True)
         n_valid = jnp.clip(cfg.vocab_size - my * v_l, 0, v_l)
-        new = _build_stat_arrays(sampler, cfg, head_full, n_valid, proj_l)
-        return _merge_refresh(new, (z, cnt, wq), refresh)
+        new = sampler.build_stats(head_full, n_valid, const)
+        return _merge_refresh(new, stats, refresh)
 
-    def refresh_stats(head, z, cnt, wq, proj, refresh):
+    def refresh_state(head, sampler_state: SamplerState, refresh
+                      ) -> SamplerState:
         if not carries_stats:
-            return z, cnt, wq
+            return sampler_state
         head = lax.stop_gradient(head)
         if mesh is None:
             n_valid = jnp.asarray(cfg.vocab_size, jnp.int32)
-            proj_l = proj if carries_proj else None
-            new = _build_stat_arrays(sampler, cfg, head, n_valid, proj_l)
-            return _merge_refresh(new, (z, cnt, wq), refresh)
-        pj = proj if proj is not None else jnp.zeros((), jnp.float32)
-        return shard_map(
+            new = sampler.build_stats(head, n_valid, sampler_state.const)
+            return sampler_state.replace_stats(
+                _merge_refresh(new, sampler_state.stats, refresh))
+        stats = shard_map(
             refresh_island, mesh=mesh, check_vma=False,
-            in_specs=(P(mdl, head_fsdp), P(mdl), P(mdl), P(mdl), P(), P()),
-            out_specs=(P(mdl), P(mdl), P(mdl)),
-        )(head, z, cnt, wq, pj, refresh)
+            in_specs=(P(mdl, head_fsdp), specs.stats, specs.const, P()),
+            out_specs=specs.stats,
+        )(head, sampler_state.stats, sampler_state.const, refresh)
+        return sampler_state.replace_stats(stats)
 
     # --- loss (differentiable; consumes fixed stats) ------------------------
-    def head_island(head, h2d, labels, z, cnt, wq, proj, key):
+    def head_island(head, h2d, labels, stats, const, key):
         """Runs per-(data,model) shard.  head: (v_l, d_l) local;
         h2d: (T_l, d); labels: (T_l,).  Returns the GLOBAL loss sum (scalar,
         replicated) — tokens x vocab both stay sharded end to end."""
-        proj_l = proj if carries_proj else None
         my = lax.axis_index(mdl)
         head_full = head
         for a in ctx.data_axes[::-1]:
@@ -265,20 +154,16 @@ def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
             h2d = lax.all_gather(h2d, mdl, axis=0, tiled=True)
             labels = lax.all_gather(labels, mdl, axis=0, tiled=True)
         n_valid = jnp.clip(cfg.vocab_size - my * v_l, 0, v_l)
-        if carries_stats:
-            state_local = {
-                "stats": _stats_from_arrays(sampler, z, cnt, wq, n_valid),
-                "proj": proj_l}
-        else:
-            state_local, _ = _local_stats(
-                sampler, cfg, lax.stop_gradient(head_full), None, None, None,
-                n_valid, proj_l, None)
+        state_local = None
+        if estimator.needs_sampling:
+            state_local = jax.tree_util.tree_map(
+                lax.stop_gradient,
+                _local_state(SamplerState(stats, const), head_full, n_valid))
         # Distinct negatives per data shard: fold the data position in.
         for a in ctx.data_axes:
             key = jax.random.fold_in(key, lax.axis_index(a))
-        losses = distributed.sharded_sampled_softmax_loss(
-            head_full, h2d, labels, sampler,
-            jax.tree_util.tree_map(lax.stop_gradient, state_local),
+        losses = distributed.sharded_estimator_loss(
+            estimator, head_full, h2d, labels, sampler, state_local,
             m, key, axis_name=mdl, abs_mode=cfg.abs_softmax,
             impl=cfg.head_impl)
         lsum = jnp.sum(losses)
@@ -290,42 +175,24 @@ def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
             lsum = lax.psum(lsum, a)
         return lsum
 
-    def island_caller(head, h2d, labels, z, cnt, wq, proj, key):
+    def island_caller(head, h2d, labels, sampler_state: SamplerState, key):
         """Returns the global loss SUM over all tokens."""
         if mesh is None:
-            n_valid = jnp.asarray(cfg.vocab_size, jnp.int32)
-            proj_l = proj if carries_proj else None
-            if carries_stats:
-                state_local = {
-                    "stats": _stats_from_arrays(sampler, z, cnt, wq, n_valid),
-                    "proj": proj_l}
-            else:
-                state_local, _ = _local_stats(
-                    sampler, cfg, lax.stop_gradient(head), None, None, None,
-                    n_valid, proj_l, None)
-            state_local = jax.tree_util.tree_map(lax.stop_gradient,
-                                                 state_local)
-            neg_ids, logq = sampler.sample_batch(state_local, h2d, m, key)
-            return jnp.sum(sampled_softmax_from_embeddings(
-                head, h2d, labels, lax.stop_gradient(neg_ids),
-                lax.stop_gradient(logq), abs_mode=cfg.abs_softmax,
-                impl=cfg.head_impl))
-        stat_in = P(mdl) if carries_stats else P()
-        if not carries_stats:  # dummies so shard_map sees arrays, not None
-            z = cnt = wq = jnp.zeros((), jnp.float32)
-        if proj is None:
-            proj = jnp.zeros((), jnp.float32)  # unused placeholder
+            return jnp.sum(estimators.local_sampled_loss(
+                estimator, sampler, head, h2d, labels, sampler_state, m,
+                key, n_valid=jnp.asarray(cfg.vocab_size, jnp.int32),
+                abs_mode=cfg.abs_softmax, impl=cfg.head_impl))
         return shard_map(
             head_island, mesh=mesh, check_vma=False,
             in_specs=(P(mdl, head_fsdp), P(dataspec, None), P(dataspec),
-                      stat_in, stat_in, stat_in, P(), P()),
+                      specs.stats, specs.const, P()),
             out_specs=P(),
-        )(head, h2d, labels, z, cnt, wq, proj, key)
+        )(head, h2d, labels, sampler_state.stats, sampler_state.const, key)
 
-    def loss_fn(params, mb, z, cnt, wq, proj, key):
+    def loss_fn(params, mb, sampler_state, key):
         h2d, labels, aux = api.backbone_hidden(params, mb, cfg, ctx)
         head = api.head_table(params, cfg)
-        lsum = island_caller(head, h2d, labels, z, cnt, wq, proj, key)
+        lsum = island_caller(head, h2d, labels, sampler_state, key)
         loss = lsum / h2d.shape[0]
         return loss + aux_coef * aux, (loss, aux)
 
@@ -350,12 +217,11 @@ def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
                    ) -> tuple[TrainState, dict]:
         refresh = (state.step % max(cfg.sampler_refresh_every, 1)) == 0
         head = api.head_table(state.params, cfg)
-        z, cnt, wq = refresh_stats(head, state.sampler_z, state.sampler_cnt,
-                                   state.sampler_wq, state.proj, refresh)
+        sstate = refresh_state(head, state.sampler_state, refresh)
         mu = max(cfg.microbatches, 1)
         if mu == 1:
             (total, (loss, aux)), grads = grad_fn(
-                state.params, batch, z, cnt, wq, state.proj, key)
+                state.params, batch, sstate, key)
         else:
             mbs = _split_microbatches(batch, mu)
             keys = jax.random.split(key, mu)
@@ -366,7 +232,7 @@ def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
             def body(acc, inp):
                 mb, k_i = inp
                 (tot_i, (loss_i, aux_i)), g_i = grad_fn(
-                    state.params, mb, z, cnt, wq, state.proj, k_i)
+                    state.params, mb, sstate, k_i)
                 tot, lo, au, g = acc
                 g = jax.tree_util.tree_map(
                     lambda a_, b_: a_ + b_.astype(jnp.float32), g, g_i)
@@ -381,10 +247,7 @@ def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
         new_state = TrainState(
             params=params,
             opt_state=opt_state,
-            sampler_z=z if carries_stats else state.sampler_z,
-            sampler_cnt=cnt if carries_stats else state.sampler_cnt,
-            sampler_wq=wq if carries_stats else state.sampler_wq,
-            proj=state.proj,
+            sampler_state=sstate if carries_stats else state.sampler_state,
             step=state.step + 1,
         )
         metrics = {"loss": loss, "aux_loss": aux, "total_loss": total}
@@ -399,7 +262,7 @@ def export_retrieval_index(state: TrainState, cfg: ArchConfig, ctx: ShardCtx,
 
     Builds UNPROJECTED hierarchy statistics from the current head table —
     one Gram matmul, the same cost as a sampler refresh.  The carried
-    training triple is deliberately NOT reused: it may be projected
+    ``sampler_state`` is deliberately NOT reused: it may be projected
     (useless for exact logits) and is at least one optimizer update stale
     (refresh ran before the step's gradient was applied), while serving
     decode must score with the embeddings actually being served.  The
@@ -418,33 +281,30 @@ def init_train_state(key, cfg: ArchConfig, ctx: ShardCtx,
                      ) -> TrainState:
     """Concrete (allocating) init — smoke tests / examples.  The dry-run uses
     abstract_train_state instead."""
-    sampler = sampler_from_cfg(cfg)
+    cfg.validate(tp=ctx.tp)
+    sampler = sampler_from_config(cfg)
+    estimator = estimators.make_estimator(cfg.estimator)
     params = api.init_params(key, cfg, ctx, max_len=max_len)
     opt_state = opt.init(params)
     head = api.head_table(params, cfg)
-    proj = None
-    if cfg.sampler_proj_rank:
-        proj = blocks.make_projection(jax.random.fold_in(key, 7),
-                                      head.shape[1], cfg.sampler_proj_rank)
-    if isinstance(sampler, RFFSampler):
-        # omega plays the projection role: fixed Gaussian directions, drawn
-        # once, replicated, carried for the lifetime of the run.
-        proj = rff_directions(jax.random.fold_in(key, 7), cfg.rff_dim,
-                              head.shape[1])
-    z = cnt = wq = None
-    if isinstance(sampler, (BlockSampler, TreeSampler, RFFSampler)):
+    sstate = empty_state()
+    if sampler.carries_state and estimator.needs_sampling:
         if ctx.mesh is None:
-            z, cnt, wq = _build_stat_arrays(
-                sampler, cfg, head,
-                jnp.asarray(cfg.vocab_size, jnp.int32), proj)
+            sstate = sampler.init_state(
+                jax.random.fold_in(key, 7), head,
+                n_valid=jnp.asarray(cfg.vocab_size, jnp.int32))
         else:
-            (sz, sc, sw) = _stat_shapes(cfg, sampler, ctx.tp)
-            z = jnp.zeros(sz, jnp.float32)
-            cnt = jnp.zeros(sc, jnp.float32)
-            wq = jnp.zeros(sw, jnp.float32)
-    return TrainState(params=params, opt_state=opt_state, sampler_z=z,
-                      sampler_cnt=cnt, sampler_wq=wq, proj=proj,
-                      step=jnp.zeros((), jnp.int32))
+            # Mesh init allocates zeros by the sampler's declared shapes;
+            # the first step's refresh (step 0) writes real statistics.
+            # Constants are still drawn concretely — they never refresh.
+            shapes = sampler.state_shapes(cfg, ctx.tp)
+            sstate = SamplerState(
+                stats=jax.tree_util.tree_map(
+                    lambda s: jnp.zeros(s.shape, s.dtype), shapes.stats),
+                const=sampler.init_const(jax.random.fold_in(key, 7),
+                                         head.shape[1]))
+    return TrainState(params=params, opt_state=opt_state,
+                      sampler_state=sstate, step=jnp.zeros((), jnp.int32))
 
 
 # --- abstract (dry-run) state ------------------------------------------------
@@ -459,7 +319,9 @@ def abstract_train_state(cfg: ArchConfig, ctx: ShardCtx,
                          ) -> TrainState:
     """ShapeDtypeStruct TrainState with NamedShardings attached — zero
     allocation; feeds jit(...).lower() for the multi-pod dry-run."""
-    sampler = sampler_from_cfg(cfg)
+    cfg.validate(tp=ctx.tp)
+    sampler = sampler_from_config(cfg)
+    estimator = estimators.make_estimator(cfg.estimator)
     key = jax.random.PRNGKey(0)
     params_struct = jax.eval_shape(
         lambda k: api.init_params(k, cfg, ctx, max_len=max_len), key)
@@ -472,26 +334,18 @@ def abstract_train_state(cfg: ArchConfig, ctx: ShardCtx,
     opt_struct = jax.eval_shape(opt.init, params_struct)
     opt_sds = _derive_opt_sds(opt_struct, params_struct, specs, ctx)
 
-    d_h = api.hidden_width(cfg)
-    z = cnt = wq = None
-    if isinstance(sampler, (BlockSampler, TreeSampler, RFFSampler)):
-        (sz, sc, sw) = _stat_shapes(cfg, sampler, ctx.tp)
-        mspec = _spec_to_sharding(ctx, P(ctx.model_axis))
-        z = jax.ShapeDtypeStruct(sz, jnp.float32, sharding=mspec)
-        cnt = jax.ShapeDtypeStruct(sc, jnp.float32, sharding=mspec)
-        wq = jax.ShapeDtypeStruct(sw, jnp.float32, sharding=mspec)
-    proj = None
-    if cfg.sampler_proj_rank:
-        proj = jax.ShapeDtypeStruct((cfg.sampler_proj_rank, d_h),
-                                    jnp.float32,
-                                    sharding=_spec_to_sharding(ctx, P()))
-    if isinstance(sampler, RFFSampler):
-        proj = jax.ShapeDtypeStruct((cfg.rff_dim, d_h), jnp.float32,
-                                    sharding=_spec_to_sharding(ctx, P()))
+    sstate = empty_state()
+    if sampler.carries_state and estimator.needs_sampling:
+        shapes = sampler.state_shapes(cfg, ctx.tp)
+        sspecs = sampler.state_specs(cfg, ctx.tp, axis=ctx.model_axis)
+        sstate = jax.tree_util.tree_map(
+            lambda s, sp: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=_spec_to_sharding(ctx, sp)),
+            shapes, sspecs)
     step = jax.ShapeDtypeStruct((), jnp.int32,
                                 sharding=_spec_to_sharding(ctx, P()))
-    return TrainState(params=params_sds, opt_state=opt_sds, sampler_z=z,
-                      sampler_cnt=cnt, sampler_wq=wq, proj=proj, step=step)
+    return TrainState(params=params_sds, opt_state=opt_sds,
+                      sampler_state=sstate, step=step)
 
 
 def _derive_opt_sds(opt_struct, params_struct, param_specs, ctx: ShardCtx):

@@ -48,9 +48,10 @@ def batch_for(key):
 def check_stage(tag, params):
     head = api.head_table(params, cfg)
     h2d = jax.random.normal(jax.random.PRNGKey(7), (B, cfg.d_model))
+    from repro.core.samplers import empty_state
     index = export_retrieval_index(
-        type(state)(params=params, opt_state=None, sampler_z=None,
-                    sampler_cnt=None, sampler_wq=None, proj=None,
+        type(state)(params=params, opt_state=None,
+                    sampler_state=empty_state(),
                     step=jnp.zeros((), jnp.int32)), cfg, mctx, leaf_size=8)
 
     # full beam == dense sharded top-k (ids bit-identical, logits equal)

@@ -1,6 +1,6 @@
 """RFFSampler through the distributed train step: the feature-sum heap is
 carried in TrainState sharded P('model') (top tree levels = TP axis,
-DESIGN.md §2.5/§2.7), omega rides replicated in state.proj, and the
+DESIGN.md §2.5/§2.7), omega rides replicated in the state's const dict, and the
 level-synchronous descent over RFF masses runs inside the head island.
 Also checks the carried-stats refresh cadence on the mesh."""
 import os
@@ -33,10 +33,12 @@ cfg = get_config("llama3-8b").reduced(
     sampler_proj_rank=None, sampler_refresh_every=2)
 opt = make_optimizer("adamw", 1e-3)
 state = init_train_state(jax.random.PRNGKey(0), cfg, mctx, opt, max_len=S)
-assert state.sampler_z.shape[0] == 2 * state.sampler_wq.shape[0], (
+stats = state.sampler_state.stats
+omega = state.sampler_state.const["omega"]
+assert stats["features"].shape[0] == 2 * stats["wq"].shape[0], (
     "feature heap must carry 2L rows per L leaves")
-assert state.sampler_z.shape[1] == cfg.rff_dim, state.sampler_z.shape
-assert state.proj.shape == (cfg.rff_dim, cfg.d_model), state.proj.shape
+assert stats["features"].shape[1] == cfg.rff_dim, stats["features"].shape
+assert omega.shape == (cfg.rff_dim, cfg.d_model), omega.shape
 step_fn = jax.jit(make_train_step(cfg, mctx, opt))
 losses = []
 for i in range(4):
@@ -48,9 +50,9 @@ assert np.isfinite(losses).all()
 # Carried statistics must be populated (refresh wrote the heap at step 0):
 # feature sums are strictly positive on live nodes, counts sum to the vocab
 # per shard (the aux heap's pad rows carry each shard's logshift).
-z = np.asarray(state.sampler_z)
+z = np.asarray(state.sampler_state.stats["features"])
 assert float(np.abs(z).sum()) > 0
-cnt = np.asarray(state.sampler_cnt)
+cnt = np.asarray(state.sampler_state.stats["aux"])
 rows_l = cnt.shape[0] // 4  # per-shard aux heap (tp = 4)
 root_counts = cnt[0::rows_l][: 4]
 assert float(root_counts.sum()) == float(cfg.vocab_size), (

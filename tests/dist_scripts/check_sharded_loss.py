@@ -91,6 +91,47 @@ for mask in (True, False):
                                    rtol=2e-5, atol=2e-5)
 print("sharded fused head == einsum (loss + grads, masked/unmasked) OK")
 
+# Estimator seam (DESIGN.md §6.2): the sharded nce / sampled-logistic
+# losses must equal a host-side reconstruction over the union of every
+# shard's stratified draws (global q~ = q_local / tp), including the
+# hits-kept vs hits-masked distinction.
+from repro.core.estimators import make_estimator  # noqa: E402
+
+
+def est_loss(w_local, h_rep, labels_rep, est_name):
+    state_local = sampler.init(jax.random.PRNGKey(7), w_local)
+    return dist.sharded_estimator_loss(
+        make_estimator(est_name), w_local, h_rep, labels_rep, sampler,
+        state_local, m, jax.random.PRNGKey(42), axis_name="model")
+
+
+n_local = n // 8
+o_full = np.asarray(h @ w.T)
+pos_full = o_full[np.arange(T), np.asarray(labels)]
+for est_name in ("nce", "sampled-logistic"):
+    f = jax.jit(shard_map(
+        lambda wl, hr, lr, e=est_name: est_loss(wl, hr, lr, e),
+        mesh=mesh, check_vma=False,
+        in_specs=(P("model"), P(), P()), out_specs=P()))
+    got = np.asarray(f(w, h, labels))
+    neg_terms = np.zeros(T)
+    for s in range(8):  # replay each shard's draws on the host
+        st_s = sampler.init(jax.random.PRNGKey(7),
+                            w[s * n_local:(s + 1) * n_local])
+        key_s = jax.random.fold_in(jax.random.PRNGKey(42), s)
+        ids_s, logq_s = sampler.sample_batch(st_s, h, m // 8, key_s)
+        gids = np.asarray(ids_s) + s * n_local          # (m/8,) shared
+        lq = np.asarray(logq_s) - np.log(8.0)           # global q~
+        o_adj = o_full[:, gids] - lq[None, :] - np.log(m)
+        sp = np.logaddexp(0.0, o_adj)
+        if est_name == "sampled-logistic":
+            hit = gids[None, :] == np.asarray(labels)[:, None]
+            sp = np.where(hit, 0.0, sp)
+        neg_terms += sp.sum(-1)
+    want = np.logaddexp(0.0, -pos_full) + neg_terms
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+print("sharded nce/sampled-logistic == host reconstruction OK")
+
 # Statistical sanity: with MANY samples the sampled loss approaches full loss.
 sampler_u = UniformSampler()
 state_u = {"n": n // 8}  # static local-vocab state, same on every shard

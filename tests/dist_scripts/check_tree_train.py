@@ -32,7 +32,8 @@ cfg = get_config("llama3-8b").reduced(
     sampler_proj_rank=16, sampler_refresh_every=2)
 opt = make_optimizer("adamw", 1e-3)
 state = init_train_state(jax.random.PRNGKey(0), cfg, mctx, opt, max_len=S)
-assert state.sampler_z.shape[0] == 2 * state.sampler_wq.shape[0], (
+stats = state.sampler_state.stats
+assert stats["z"].shape[0] == 2 * stats["wq"].shape[0], (
     "tree heap must carry 2L rows per L leaves")
 step_fn = jax.jit(make_train_step(cfg, mctx, opt))
 losses = []
@@ -43,6 +44,7 @@ for i in range(4):
 print("tree mesh losses:", [f"{x:.3f}" for x in losses])
 assert np.isfinite(losses).all()
 # Carried statistics must be populated (refresh wrote the heap at step 0).
-assert float(np.abs(np.asarray(state.sampler_z)).sum()) > 0
-assert float(np.asarray(state.sampler_cnt).sum()) > 0
+stats = state.sampler_state.stats
+assert float(np.abs(np.asarray(stats["z"])).sum()) > 0
+assert float(np.asarray(stats["cnt"]).sum()) > 0
 print("TREE TRAIN CHECKS PASSED")

@@ -1,0 +1,67 @@
+"""Public-API surface test: the ``repro.api`` facade is a contract.
+
+Snapshots the signature of every ``__all__`` entry (and every public
+``SoftmaxHead`` method) against a committed fixture, so a future PR that
+renames a parameter, changes a default, or drops an entry fails tier-1
+loudly instead of silently breaking downstream users of the facade.
+
+Regenerate deliberately after an INTENDED surface change:
+
+    REPRO_REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest \
+        tests/test_api_surface.py
+"""
+import inspect
+import json
+import os
+import pathlib
+
+import repro.api as api
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "api_surface.json"
+
+
+def _signature_of(obj) -> str:
+    if inspect.isclass(obj):
+        return f"class({inspect.signature(obj)})"
+    if callable(obj):
+        return str(inspect.signature(obj))
+    return f"value:{type(obj).__name__}"
+
+
+def current_surface() -> dict[str, str]:
+    surface = {}
+    for name in sorted(api.__all__):
+        obj = getattr(api, name)
+        surface[name] = _signature_of(obj)
+    for meth in sorted(vars(api.SoftmaxHead)):
+        if meth.startswith("_"):
+            continue
+        obj = inspect.getattr_static(api.SoftmaxHead, meth)
+        if isinstance(obj, property):
+            surface[f"SoftmaxHead.{meth}"] = "property"
+        elif callable(obj):
+            surface[f"SoftmaxHead.{meth}"] = str(inspect.signature(obj))
+    return surface
+
+
+def test_api_all_resolves():
+    for name in api.__all__:
+        assert hasattr(api, name), f"__all__ lists missing name '{name}'"
+
+
+def test_api_surface_matches_snapshot():
+    surface = current_surface()
+    if os.environ.get("REPRO_REGEN_GOLDEN"):
+        GOLDEN.write_text(json.dumps(surface, indent=1, sort_keys=True)
+                          + "\n")
+    snapshot = json.loads(GOLDEN.read_text())
+    added = sorted(set(surface) - set(snapshot))
+    removed = sorted(set(snapshot) - set(surface))
+    changed = {k: (snapshot[k], surface[k])
+               for k in set(surface) & set(snapshot)
+               if surface[k] != snapshot[k]}
+    assert not (added or removed or changed), (
+        "repro.api surface drifted from tests/golden/api_surface.json.\n"
+        f"  added:   {added}\n  removed: {removed}\n  changed: {changed}\n"
+        "If intended, regenerate with REPRO_REGEN_GOLDEN=1 and review the "
+        "diff as part of the API change.")

@@ -60,8 +60,9 @@ def test_tree_sampler_sharded_train():
 @pytest.mark.slow
 def test_rff_sampler_sharded_train():
     """RFFSampler through the distributed train step: feature-sum heap
-    sharded P('model'), omega replicated in state.proj, level-synchronous
-    descent over RFF masses in the island (DESIGN.md §2.7)."""
+    sharded P('model'), omega replicated in the SamplerState const dict,
+    level-synchronous descent over RFF masses in the island
+    (DESIGN.md §2.7)."""
     out = _run("check_rff_train.py")
     assert "RFF TRAIN CHECKS PASSED" in out
 

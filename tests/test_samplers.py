@@ -42,8 +42,18 @@ def test_unigram_respects_counts():
     assert frac > 0.95
 
 
+def test_bigram_excluded_from_registry():
+    """BigramSampler doesn't satisfy the Sampler protocol (it conditions on
+    a discrete context id, not a hidden vector) — make_sampler must say so
+    instead of handing out an object whose .sample can't work."""
+    with pytest.raises(ValueError, match="sample_ctx"):
+        make_sampler("bigram")
+
+
 def test_bigram_conditional():
-    sampler = make_sampler("bigram")
+    from repro.core.samplers import BigramSampler
+
+    sampler = BigramSampler()
     w = jnp.zeros((6, 2))
     state = sampler.init(None, w)
     counts = jnp.eye(6) * 100.0  # next == prev with high probability

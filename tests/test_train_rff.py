@@ -1,7 +1,7 @@
 """RFFSampler as a first-class citizen of the training system: the feature
-heap carried in TrainState, omega carried in state.proj, refresh cadence,
-and end-to-end learning through make_train_step (mesh=None; the sharded
-variant lives in tests/dist_scripts/check_rff_train.py)."""
+heap carried in TrainState.sampler_state.stats, omega in its const dict,
+refresh cadence, and end-to-end learning through make_train_step (mesh=None;
+the sharded variant lives in tests/dist_scripts/check_rff_train.py)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -29,10 +29,12 @@ def test_rff_sampler_trains_end_to_end():
     data = batch_iterator_for(cfg, CTX, global_batch=64, seq_len=0, seed=0)
     state = init_train_state(jax.random.PRNGKey(0), cfg, CTX, opt, max_len=8)
     # Feature stats are carried heap-packed: 2L rows of (D,) for L leaves;
-    # omega (D, d) rides in state.proj.
-    assert state.sampler_z.shape[0] == 2 * state.sampler_wq.shape[0]
-    assert state.sampler_z.shape[1] == cfg.rff_dim
-    assert state.proj.shape == (cfg.rff_dim, state.sampler_wq.shape[2])
+    # omega (D, d) rides in the state's const dict.
+    stats = state.sampler_state.stats
+    assert stats["features"].shape[0] == 2 * stats["wq"].shape[0]
+    assert stats["features"].shape[1] == cfg.rff_dim
+    assert state.sampler_state.const["omega"].shape == (
+        cfg.rff_dim, stats["wq"].shape[2])
     step = jax.jit(make_train_step(cfg, CTX, opt))
     losses = []
     for i in range(60):
@@ -52,17 +54,18 @@ def test_rff_refresh_cadence_carries_stats():
     opt = make_optimizer("adamw", 1e-2, weight_decay=0.0)
     data = batch_iterator_for(cfg, CTX, global_batch=32, seq_len=0, seed=1)
     state = init_train_state(jax.random.PRNGKey(0), cfg, CTX, opt, max_len=8)
-    omega0 = np.asarray(state.proj)
+    omega0 = np.asarray(state.sampler_state.const["omega"])
     step = jax.jit(make_train_step(cfg, CTX, opt))
     heaps = []
     for i in range(4):
         state, _ = step(state, next(data),
                         jax.random.fold_in(jax.random.PRNGKey(5), i))
-        heaps.append(np.asarray(state.sampler_z))
+        heaps.append(np.asarray(state.sampler_state.stats["features"]))
     # step 0 refreshes (step % 3 == 0); steps 1, 2 carry; step 3 refreshes.
     np.testing.assert_array_equal(heaps[0], heaps[1])
     np.testing.assert_array_equal(heaps[1], heaps[2])
     assert np.abs(heaps[3] - heaps[2]).max() > 0
-    np.testing.assert_array_equal(omega0, np.asarray(state.proj))
+    np.testing.assert_array_equal(
+        omega0, np.asarray(state.sampler_state.const["omega"]))
     # Feature sums are non-negative by construction (positive features).
     assert heaps[3].min() >= 0.0

@@ -29,8 +29,9 @@ def test_tree_sampler_trains_end_to_end():
     data = batch_iterator_for(cfg, CTX, global_batch=64, seq_len=0, seed=0)
     state = init_train_state(jax.random.PRNGKey(0), cfg, CTX, opt, max_len=8)
     # Tree stats are carried heap-packed: 2L rows of (r, r) for L leaves.
-    assert state.sampler_z.shape[0] == 2 * state.sampler_wq.shape[0]
-    assert state.sampler_z.shape[1] == state.sampler_wq.shape[2]
+    stats = state.sampler_state.stats
+    assert stats["z"].shape[0] == 2 * stats["wq"].shape[0]
+    assert stats["z"].shape[1] == stats["wq"].shape[2]
     step = jax.jit(make_train_step(cfg, CTX, opt))
     losses = []
     for i in range(60):
@@ -54,7 +55,7 @@ def test_tree_refresh_cadence_carries_stats():
     for i in range(4):
         state, _ = step(state, next(data),
                         jax.random.fold_in(jax.random.PRNGKey(5), i))
-        heaps.append(np.asarray(state.sampler_z))
+        heaps.append(np.asarray(state.sampler_state.stats["z"]))
     # step 0 refreshes (step % 3 == 0); steps 1, 2 carry; step 3 refreshes.
     np.testing.assert_array_equal(heaps[0], heaps[1])
     np.testing.assert_array_equal(heaps[1], heaps[2])
