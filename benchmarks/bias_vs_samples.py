@@ -32,7 +32,8 @@ GRAD_BIAS_SAMPLERS = ["uniform", "quadratic-oracle", "rff", "softmax"]
 
 
 def grad_bias(samplers=None, ms=(16, 64), n=256, d=12, n_queries=4,
-              reps=8000, rff_dim=512, seed=0, quiet=False, out_json=None):
+              reps=8000, rff_dim=512, seed=0, quiet=False, out_json=None,
+              two_stage_pool=128):
     """Gradient bias of the eq. 5 estimator per sampler family x m.
 
     Draws negatives from each family's exact all-class distribution over the
@@ -44,6 +45,14 @@ def grad_bias(samplers=None, ms=(16, 64), n=256, d=12, n_queries=4,
     row's value is real bias.  Returns rows of {"sampler", "m", "bias_linf",
     "bias_l2"} (mean over queries); the rff rows sit strictly below the
     quadratic rows at equal m.
+
+    A second section measures the TWO-STAGE family with REAL draws (the
+    composed pool x resample q cannot be reduced to one dense vector): the
+    tapas sampler vs its pass-1 base at equal per-example budget, through
+    the hit-masked eq. 5 estimator (real draws can collide with the label).
+    The composed correction makes the partition estimate exactly unbiased
+    (zero conditional variance at tau = 1, DESIGN.md §2.8), so the tapas
+    rows sit at the Monte-Carlo floor, below the base's own rows.
     """
     import jax
     import jax.numpy as jnp
@@ -108,6 +117,46 @@ def grad_bias(samplers=None, ms=(16, 64), n=256, d=12, n_queries=4,
                          "bias_l2": float(np.mean(l2))})
             if not quiet:
                 print(f"  grad-bias {name:18s} m={m:4d} "
+                      f"linf={rows[-1]['bias_linf']:.4f} "
+                      f"l2={rows[-1]['bias_l2']:.4f}", flush=True)
+
+    # real-draw two-stage section: tapas vs its pass-1 base, hit-masked
+    base = make_sampler("block-quadratic-shared", block_size=32)
+    tap = make_sampler("tapas", base=base, pool=two_stage_pool)
+    for name, sampler in (("block-quadratic-shared", base), ("tapas", tap)):
+        state = sampler.init(jax.random.fold_in(key, 2), w)
+        acc2 = {m: ([], []) for m in ms}
+        for t in range(n_queries):
+            h = hs[t]
+            o = w @ h
+            label = jax.random.categorical(jax.random.fold_in(key, 10 + t), o)
+            full = full_softmax_grad_wrt_logits(o[None], label[None])[0]
+            for m in ms:
+                def one(k, m=m):
+                    if getattr(sampler, "two_stage", False):
+                        ids, logq = sampler.sample(state, h, m, k)
+                    else:  # batch-shared base: one draw set per (1-row) batch
+                        ids, logq = sampler.sample_batch(state, h[None, :],
+                                                         m, k)
+                    return sampled_softmax_grad_wrt_logits(
+                        o, label, ids, logq, n=n, mask_hits=True)
+
+                keys = jax.random.split(
+                    jax.random.fold_in(key, 100 + t), reps)
+                # chunked vmap: each tapas rep re-scores a (pool, pool)
+                # multiplicity matrix, so bound the live batch
+                total = jnp.zeros((n,))
+                for kc in np.array_split(np.asarray(keys), max(1, reps // 250)):
+                    total = total + jax.vmap(one)(jnp.asarray(kc)).sum(0)
+                diff = np.asarray(total / reps - full)
+                acc2[m][0].append(np.abs(diff).max())
+                acc2[m][1].append(np.linalg.norm(diff))
+        for m in ms:
+            rows.append({"sampler": name, "m": int(m),
+                         "bias_linf": float(np.mean(acc2[m][0])),
+                         "bias_l2": float(np.mean(acc2[m][1]))})
+            if not quiet:
+                print(f"  grad-bias {name + '[real]':18s} m={m:4d} "
                       f"linf={rows[-1]['bias_linf']:.4f} "
                       f"l2={rows[-1]['bias_l2']:.4f}", flush=True)
     if out_json:

@@ -4,6 +4,7 @@ Compares, as the number of classes n grows:
   * oracle softmax sampling          — O(n d) per query batch
   * two-level block kernel sampling  — O(n_blocks r^2 + m B r)
   * batch-shared kernel sampling     — O(n_blocks r^2) amortized over T
+  * two-pass tapas sampling          — shared pool + O(T pool d) re-score
   * tree sampling, sequential vs level-synchronous batched descent
     (DESIGN.md §2.6): T*m*depth per-draw Bernoulli steps collapse to
     depth batched steps per batch of draws
@@ -19,7 +20,7 @@ import jax.numpy as jnp
 from benchmarks.common import csv_row, time_fn
 from repro.core import blocks, tree
 from repro.core.kernel_fns import quadratic_kernel
-from repro.core.samplers import softmax_oracle
+from repro.core.samplers import BlockSampler, TapasSampler, softmax_oracle
 
 
 def run(ns=(4096, 16384, 65536), d=64, m=64, t_batch=64, quiet=False):
@@ -54,6 +55,20 @@ def run(ns=(4096, 16384, 65536), d=64, m=64, t_batch=64, quiet=False):
         us = time_fn(f_shared, hs, jax.random.PRNGKey(4))
         rows.append(csv_row(f"sample/batch-shared/n={n}", us,
                             f"amortized={us/t_batch:.2f}us/query"))
+
+        # two-pass mega-batch (tapas, DESIGN.md §2.8): ONE shared pool from
+        # the batch-shared kernel sampler, then a per-example re-score +
+        # resample over the pool — per-example informative negatives at an
+        # amortized cost that stays O(pool) past the shared stage.
+        pool = min(1024, n)
+        tap = TapasSampler(base=BlockSampler(kernel=k, block_size=block,
+                                             shared=True), pool=pool)
+        tstate_tap = tap.init(jax.random.PRNGKey(8), w)
+        f_tap = jax.jit(lambda h, key: tap.sample_batch(tstate_tap, h, m, key))
+        us = time_fn(f_tap, hs, jax.random.PRNGKey(7))
+        rows.append(csv_row(
+            f"sample/tapas/n={n}", us,
+            f"amortized={us/t_batch:.2f}us/query effective-pool={pool}"))
 
         # tree sampler (paper §3.2): sequential per-draw descent vs the
         # level-synchronous batched engine.  Sequential cost is T*m*depth

@@ -142,13 +142,22 @@ class SoftmaxHead:
 
     # -- sampling + loss -----------------------------------------------------
     def sample(self, state: SamplerState, h: Array, key: Array,
-               m: int | None = None) -> tuple[Array, Array]:
+               m: int | None = None, *, w: Array | None = None
+               ) -> tuple[Array, Array]:
         """Draw negatives for a batch: ids + EXACT log q ((T, m), or (m,)
         for batch-shared families).  Carrying samplers only — the
         non-carrying families derive their runtime state from ``w`` at
-        loss time (use ``loss(...)`` or ``sampler.init(key, w)``)."""
+        loss time (use ``loss(...)`` or ``sampler.init(key, w)``).
+        Two-stage samplers (tapas) additionally need the class table ``w``
+        itself: pass 2 re-scores the pool against live logits."""
         sampler = self.sampler
-        if not sampler.carries_state:
+        if sampler.two_stage:
+            if w is None:
+                raise ValueError(
+                    f"sampler '{sampler.name}' re-scores its candidate "
+                    "pool against the class table; pass w=")
+            self._check_table(w)
+        elif not sampler.carries_state:
             raise TypeError(
                 f"sampler '{sampler.name}' carries no state; draw through "
                 "loss(...) or construct its runtime state with "
@@ -156,8 +165,12 @@ class SoftmaxHead:
         m = m if m is not None else self.cfg.m_negatives
         if m <= 0:
             raise ValueError(f"m must be positive, got {m}")
-        runtime = sampler.hydrate(
-            state, jnp.asarray(self.cfg.vocab_size, jnp.int32))
+        n_valid = jnp.asarray(self.cfg.vocab_size, jnp.int32)
+        if sampler.two_stage:
+            runtime = sampler.island_runtime(
+                state, jax.lax.stop_gradient(w), n_valid)
+        else:
+            runtime = sampler.hydrate(state, n_valid)
         return sampler.sample_batch(runtime, h, m, key)
 
     def loss(self, w: Array, h: Array, labels: Array, *,

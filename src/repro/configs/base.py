@@ -93,6 +93,13 @@ class ArchConfig:
     # rff ignores sampler_proj_rank — omega: (D, d) IS its projection.
     rff_dim: int = 128
     rff_tau: float = 1.0
+    # tapas two-pass sampler (sampler="tapas"; DESIGN.md §2.8): pass-1 pool
+    # size P, pass-1 base family (any single-stage sampler; it reads its own
+    # knobs — sampler_block/alpha/proj_rank/rff_* — from this same config),
+    # and the pass-2 resample temperature (q2 ∝ exp(o / tapas_tau) / pi).
+    tapas_pool: int = 1024
+    tapas_base: str = "block-quadratic-shared"
+    tapas_tau: float = 1.0
     # loss estimator over the sampled negatives (core/estimators.py,
     # DESIGN.md §6): "sampled-softmax" (the paper's eq. 2/3 — default),
     # "nce", "sampled-logistic", or "full" (dense oracle; no sampling).
@@ -152,6 +159,16 @@ class ArchConfig:
         if self.sampler == "rff" and (self.rff_dim <= 0 or self.rff_tau <= 0):
             bad(f"sampler='rff' needs rff_dim > 0 and rff_tau > 0, "
                 f"got rff_dim={self.rff_dim} rff_tau={self.rff_tau}")
+        if self.sampler == "tapas":
+            if self.tapas_pool <= 0 or self.tapas_tau <= 0:
+                bad(f"sampler='tapas' needs tapas_pool > 0 and tapas_tau "
+                    f"> 0, got tapas_pool={self.tapas_pool} "
+                    f"tapas_tau={self.tapas_tau}")
+            if tp > 1 and self.tapas_pool % tp:
+                bad(f"tapas_pool={self.tapas_pool} must divide by the "
+                    f"vocab-parallel degree tp={tp} (each shard draws "
+                    "pool/tp candidates from its local base distribution "
+                    "— DESIGN.md §2.8)")
         samples = make_estimator(self.estimator).needs_sampling
         if samples and not smp.supports_head_loss():
             bad(f"sampler '{self.sampler}' cannot drive the head loss: it "
@@ -235,6 +252,7 @@ class ArchConfig:
             sampler_block=32,
             sampler_proj_rank=None,
             rff_dim=64,
+            tapas_pool=128,
             remat=False,
         )
         if self.n_heads:

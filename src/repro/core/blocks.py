@@ -154,6 +154,22 @@ def batch_context_gram(h: Array) -> tuple[Array, Array]:
                                                           jnp.float32)
 
 
+def categorical_rows(key: Array, logits: Array, m: int) -> Array:
+    """m categorical draws per row of ``logits`` (T, P) -> slots (T, m).
+
+    Inverse-CDF: ONE uniform per draw, against ``jax.random.categorical``'s
+    (m, T, P) Gumbel tensor — the difference between ~T*m and ~T*m*P RNG
+    calls, which dominates resampling at mega-batch pool sizes
+    (DESIGN.md §2.8).  The sharded tapas path and its host-reconstruction
+    test replay this exact function, so keep the draw mechanics in one
+    place."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    cdf = jnp.cumsum(probs, axis=-1)
+    u = jax.random.uniform(key, (logits.shape[0], m), dtype=probs.dtype)
+    idx = jax.vmap(lambda c, uu: jnp.searchsorted(c, uu, side="right"))(cdf, u)
+    return jnp.minimum(idx, logits.shape[-1] - 1).astype(jnp.int32)
+
+
 def sample_shared(stats: BlockStats, kernel: SamplingKernel, h: Array, m: int,
                   key: Array, proj: Array | None = None
                   ) -> tuple[Array, Array]:
@@ -181,14 +197,26 @@ def sample_shared(stats: BlockStats, kernel: SamplingKernel, h: Array, m: int,
     blk = jax.random.categorical(k_blk, blk_logits, shape=(m,))
 
     # Exact within-block scores: alpha * w^T HH w + T, via rows @ HH.
-    rows = stats.wq[blk]  # (m, block, r)
-    quad = jnp.einsum("mbr,rs,mbs->mb", rows, hh, rows)
+    mega = m >= 4 * stats.wq.shape[0]
+    if mega:
+        # mega-batch regime (tapas pools, DESIGN.md §2.8): with far more
+        # draws than blocks every block is drawn repeatedly — score each
+        # block ONCE (O(n r^2)) and gather, instead of per draw (O(m B r^2))
+        quad = jnp.einsum("nbr,rs,nbs->nb", stats.wq, hh, stats.wq)[blk]
+    else:
+        rows = stats.wq[blk]  # (m, block, r)
+        quad = jnp.einsum("mbr,rs,mbs->mb", rows, hh, rows)
     scores = kernel.alpha * quad + t
     ids_grid = blk[:, None] * stats.block_size + jnp.arange(stats.block_size)
     scores = jnp.where(ids_grid < stats.n_valid, scores, 0.0)
     within_logits = jnp.where(scores > 0,
                               jnp.log(jnp.maximum(scores, 1e-30)), -jnp.inf)
-    within = jax.random.categorical(k_in, within_logits, axis=-1)
+    if mega:
+        # same distribution, ~m instead of ~m*B RNG calls; the small-m
+        # Gumbel path is pinned by the golden-parity suite, keep it exact
+        within = categorical_rows(k_in, within_logits, 1)[:, 0]
+    else:
+        within = jax.random.categorical(k_in, within_logits, axis=-1)
     log_p_within = jnp.take_along_axis(
         jax.nn.log_softmax(within_logits, axis=-1), within[:, None], axis=-1
     )[:, 0]

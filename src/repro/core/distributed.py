@@ -10,9 +10,20 @@ Stratification removes all cross-shard sampling traffic and is a
 variance-reduction over one global multinomial (documented beyond-paper
 change; see EXPERIMENTS.md §Perf).
 
+Two-stage (tapas) samplers use a different pattern — "sample → all-gather
+pool → per-example re-score" (DESIGN.md §2.8): every shard draws pool/tp
+candidates from its LOCAL base distribution, the pool's ids, inclusion
+log-probabilities and embedding rows are all-gathered across the model axis
+(the one place a (pool, d) tensor crosses shards; its transpose is the
+gradient's psum_scatter back to the owning shard), every shard re-scores
+the replicated pool against its tokens, and each shard then draws m/tp
+slots from the SAME composed global q — so the eq. 2 correction uses
+``logq + log m`` with no stratification factor.
+
 All functions here are written to run INSIDE ``jax.shard_map`` with a named
-tensor-parallel axis; they only communicate through psum/pmax of scalars or
-(T,)-vectors — never through gathered logits.
+tensor-parallel axis; apart from the tapas pool gather they only communicate
+through psum/pmax of scalars or (T,)-vectors — never through gathered
+logits.
 """
 from __future__ import annotations
 
@@ -24,7 +35,11 @@ from jax import lax
 
 from repro.core.estimators import Estimator
 from repro.core.sampled_softmax import transform_logits
-from repro.core.samplers import Sampler
+from repro.core.samplers import (
+    Sampler,
+    categorical_rows,
+    pool_log_inclusion,
+)
 from repro.kernels import ops
 
 Array = jax.Array
@@ -171,6 +186,109 @@ def _corrected_neg_logits(w_local: Array, h32: Array, labels: Array,
     return o_adj
 
 
+def sharded_tapas_negatives(sampler: Sampler, state_local: Any,
+                            w_local: Array, h: Array, m: int, key: Array, *,
+                            axis_name: str,
+                            bias_local: Array | None = None
+                            ) -> tuple[Array, Array, Array, Array]:
+    """The two-pass "sample → all-gather pool → re-score" pattern
+    (DESIGN.md §2.8), shard-local view.
+
+    Pass 1: this shard draws pool/tp candidates from its LOCAL base
+    distribution (batch-shared bases use their native batch-summed draw,
+    per-example bases the mean query — any fixed pool distribution keeps
+    the composed q exact).  A class's global pool-inclusion probability is
+    its inclusion on the one shard that owns it, so ``pool_log_inclusion``
+    applies to the LOCAL per-draw log q1 with pool/tp draws — no /tp.
+
+    All-gather (model axis): pool global ids, log pi, embedding rows
+    (+ bias) — shard order = gather order, which the single-host
+    reconstruction in tests/dist_scripts/check_tapas_train.py replays.
+
+    Pass 2: re-score the replicated pool (one (T, pool) matmul — the pool
+    is shared, so there is no (T, m, d) gather to avoid), then draw m/tp
+    slots per shard from the SAME composed global q (keys folded by shard
+    index), so the tp * m/tp = m draws are i.i.d. from q and the eq. 2
+    correction is ``logq + log m`` with no stratification factor.
+
+    Returns (pool_gids (pool,), o (T, pool) raw pool logits CARRYING
+    GRADIENT through the embedding all-gather, slots (T, m/tp) pool slot
+    indices, logq (T, m/tp) composed pool x resample log-probability,
+    stop-gradiented).
+    """
+    tp = int(lax.psum(1, axis_name))
+    assert m % tp == 0, f"m={m} must divide by the TP degree {tp}"
+    pool = sampler.pool
+    assert pool % tp == 0, f"pool={pool} must divide by the TP degree {tp}"
+    m_local, p_local = m // tp, pool // tp
+    k_pool, k_draw = jax.random.split(key)
+    k_pool_local = jax.random.fold_in(k_pool, lax.axis_index(axis_name))
+    base_rt = state_local["base"]
+    if sampler.base.shares_negatives:
+        pids, lq1 = sampler.base.sample_batch(base_rt, h, p_local,
+                                              k_pool_local)
+    else:
+        pids, lq1 = sampler.base.sample(base_rt, jnp.mean(h, axis=0),
+                                        p_local, k_pool_local)
+    logpi_l = pool_log_inclusion(lq1, p_local)
+    gids_l = pids + local_vocab_offset(w_local.shape[0], axis_name)
+    pool_w = lax.all_gather(w_local[pids], axis_name, axis=0, tiled=True)
+    pool_gids = lax.all_gather(gids_l, axis_name, axis=0, tiled=True)
+    pool_logpi = lax.all_gather(logpi_l, axis_name, axis=0, tiled=True)
+    o = jnp.einsum("td,pd->tp", h.astype(jnp.float32),
+                   pool_w.astype(jnp.float32))
+    if bias_local is not None:
+        o = o + lax.all_gather(bias_local[pids], axis_name, axis=0,
+                               tiled=True)[None, :]
+    counts = jnp.zeros((w_local.shape[0] * tp,), jnp.int32
+                       ).at[pool_gids].add(1)
+    mult = counts[pool_gids]          # multiplicity via O(P) scatter, not P^2
+    o_sg = lax.stop_gradient(o) / sampler.tau
+    s = o_sg - (pool_logpi + jnp.log(mult.astype(jnp.float32)))[None, :]
+    k_shard = jax.random.fold_in(k_draw, lax.axis_index(axis_name))
+    slots = categorical_rows(k_shard, s, m_local)
+    logq = (jnp.take_along_axis(o_sg, slots, axis=1)
+            - jax.nn.logsumexp(s, axis=-1)[:, None])
+    return pool_gids, o, slots, logq
+
+
+def _sharded_tapas_loss(
+    est: Estimator, w_local: Array, h: Array, labels: Array,
+    sampler: Sampler, state_local: Any, m: int, key: Array, *,
+    axis_name: str, abs_mode: bool, bias_local: Array | None) -> Array:
+    """Estimator loss over tapas negatives (per-example (T,)).
+
+    The m/tp per-shard draws come from one GLOBAL q, so the corrected
+    logits are ``o - logq - ln m`` on every shard and the estimators
+    combine exactly as in the stratified path: pmax + psum logsumexp for
+    sampled-softmax, a psum of softplus sums for the logistic family."""
+    if est.name not in ("sampled-softmax", "nce", "sampled-logistic"):
+        raise NotImplementedError(
+            f"estimator '{est.name}' has no sharded tapas routing; add it "
+            "to _sharded_tapas_loss")
+    pos = transform_logits(
+        _positive_logit(w_local, h, labels, axis_name, bias_local), abs_mode)
+    pool_gids, o, slots, logq = sharded_tapas_negatives(
+        sampler, state_local, w_local, h, m, key, axis_name=axis_name,
+        bias_local=bias_local)
+    o_sel = jnp.take_along_axis(o, slots, axis=1)          # (T, m/tp), grads
+    o_adj = (transform_logits(o_sel, abs_mode) - logq
+             - jnp.log(jnp.asarray(m, jnp.float32)))
+    hit = pool_gids[slots] == labels[:, None]
+    if est.masks_hits:
+        # -inf: zero mass in the partition AND zero softplus value/grad.
+        o_adj = jnp.where(hit, -jnp.inf, o_adj)
+    if est.name == "sampled-softmax":
+        local_max = lax.stop_gradient(jnp.max(o_adj, axis=-1))
+        c = lax.pmax(jnp.maximum(local_max, lax.stop_gradient(pos)),
+                     axis_name)
+        sumexp = (lax.psum(jnp.sum(jnp.exp(o_adj - c[:, None]), axis=-1),
+                           axis_name) + jnp.exp(pos - c))
+        return jnp.log(sumexp) + c - pos
+    neg_sum = lax.psum(jnp.sum(jax.nn.softplus(o_adj), axis=-1), axis_name)
+    return jax.nn.softplus(-pos) + neg_sum
+
+
 def sharded_estimator_loss(
     est: Estimator, w_local: Array, h: Array, labels: Array,
     sampler: Sampler, state_local: Any, m: int, key: Array, *,
@@ -188,6 +306,11 @@ def sharded_estimator_loss(
                           (T,) per-shard softplus sums.
       full             -> ``sharded_full_softmax_loss`` (dense oracle).
 
+    Two-stage samplers (``sampler.two_stage``) divert to the tapas pool
+    pattern (``_sharded_tapas_loss``) before the per-estimator routing —
+    their negatives come from the all-gathered pool, not stratified
+    per-shard draws.
+
     Same contract as sharded_sampled_softmax_loss: returns per-example (T,)
     losses, negatives drawn stratified m/tp per shard with exact global
     q~ = q_local / tp (module docstring).
@@ -196,6 +319,10 @@ def sharded_estimator_loss(
         return sharded_full_softmax_loss(
             w_local, h, labels, axis_name=axis_name, abs_mode=abs_mode,
             bias_local=bias_local)
+    if sampler.two_stage:
+        return _sharded_tapas_loss(
+            est, w_local, h, labels, sampler, state_local, m, key,
+            axis_name=axis_name, abs_mode=abs_mode, bias_local=bias_local)
     if est.name == "sampled-softmax":
         return sharded_sampled_softmax_loss(
             w_local, h, labels, sampler, state_local, m, key,

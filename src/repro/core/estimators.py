@@ -198,10 +198,8 @@ def local_sampled_loss(est: Estimator, sampler, w: Array, h: Array,
     if not est.needs_sampling:
         return loss_from_embeddings(est, w, h, labels, None, None,
                                     abs_mode=abs_mode, bias=bias, impl=impl)
-    if sampler.carries_state:
-        runtime = sampler.hydrate(state, n_valid)
-    else:
-        runtime = sampler.island_state(jax.lax.stop_gradient(w), n_valid)
+    runtime = sampler.island_runtime(state, jax.lax.stop_gradient(w),
+                                     n_valid)
     runtime = jax.tree_util.tree_map(jax.lax.stop_gradient, runtime)
     neg_ids, logq = sampler.sample_batch(runtime, h, m, key)
     return loss_from_embeddings(

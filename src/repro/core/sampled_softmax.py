@@ -186,16 +186,22 @@ def full_softmax_grad_wrt_logits(o: Array, labels: Array,
 
 def sampled_softmax_grad_wrt_logits(o: Array, labels: Array, neg_ids: Array,
                                     logq: Array, *, n: int,
-                                    abs_mode: bool = False) -> Array:
+                                    abs_mode: bool = False,
+                                    mask_hits: bool = False) -> Array:
     """eq. 5: scatter of (p' - y') onto the original logit vector.
 
     o: (n,) full logits of ONE example (test oracle only); neg_ids/logq: (m,).
+    ``mask_hits`` drops negatives that collided with the label (the training
+    estimator's accidental-hit policy) — needed when the draws come from a
+    REAL sampler whose support includes the positive, e.g. the tapas pool.
     Returns the estimator of dL/do: (n,)."""
     m = neg_ids.shape[-1]
     pos_logit = o[labels]
     neg_logits = o[neg_ids]
     pos_t = transform_logits(pos_logit, abs_mode)
     neg_t = adjust_neg_logits(transform_logits(neg_logits, abs_mode), logq, m)
+    if mask_hits:
+        neg_t = jnp.where(neg_ids == labels, -jnp.inf, neg_t)
     all_logits = jnp.concatenate([pos_t[None], neg_t])
     p_prime = jax.nn.softmax(all_logits)
     grad = jnp.zeros(n)

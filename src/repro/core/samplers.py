@@ -47,6 +47,16 @@ Distributions (paper §4.1.2 + Fig. 2, plus the RFF family of Rawat et al.
                      hierarchy — near-softmax q at O(D log n) per draw
   rff-oracle         q ∝ <phi(h), phi(w_i)> brute force (the statistical
                      reference for the rff family)
+  tapas              two-pass mega-batch sampling (Bai et al. 2017, TAPAS;
+                     DESIGN.md §2.8): pass 1 draws one large shared pool of
+                     P candidates through ANY single-stage base family,
+                     pass 2 re-scores the pool per example and resamples
+                     B informative negatives from q2 ∝ exp(o/tau)/pi over
+                     the pool.  The reported logq is the EXACT composed
+                     pool-inclusion x resample log-probability
+                     log pi_j + log q2(j | pool) — a Horvitz-Thompson
+                     composition under which the eq. 2 partition estimator
+                     stays exactly unbiased for any pool size and any base q
 """
 from __future__ import annotations
 
@@ -58,6 +68,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import blocks, hierarchy, tree
+from repro.core.blocks import categorical_rows  # noqa: F401  (re-export:
+# the sharded tapas path and its host-reconstruction test import it here)
 from repro.core.kernel_fns import (
     SamplingKernel,
     quadratic_kernel,
@@ -110,6 +122,11 @@ class Sampler:
     #: True when the train step carries + refreshes this sampler's
     #: statistics in TrainState (block/tree/rff families).
     carries_state: bool = False
+    #: True for multi-stage samplers whose runtime state needs the head
+    #: table itself (pool re-scoring) on top of any carried statistics.
+    #: The sharded loss routes these through the pool-all-gather pattern
+    #: (core/distributed.py) instead of stratified per-shard sampling.
+    two_stage: bool = False
 
     def init(self, key: Array, w: Array) -> Any:
         raise NotImplementedError
@@ -185,6 +202,17 @@ class Sampler:
         rebuilt from the gathered head shard every step."""
         raise TypeError(
             f"sampler '{self.name}' is unsupported in the train island")
+
+    def island_runtime(self, state: SamplerState, head_full: Array,
+                       n_valid) -> Any:
+        """ONE entry point for runtime state inside the train island and
+        the facade: carrying samplers hydrate their carried pytree,
+        non-carrying ones rebuild from the gathered head.  Multi-stage
+        samplers override this to keep the (stop-gradiented) head table in
+        the runtime state for pool re-scoring."""
+        if self.carries_state:
+            return self.hydrate(state, n_valid)
+        return self.island_state(head_full, n_valid)
 
     def supports_head_loss(self) -> bool:
         """True when the train island / SoftmaxHead.loss can drive this
@@ -632,6 +660,145 @@ class RFFSampler(Sampler):
                                           self.tau, h, keys)
 
 
+def pool_log_inclusion(logq1: Array, pool_size: int) -> Array:
+    """log pi_j = log(1 - (1 - q1_j)^P): the probability class j appears in
+    a pool of P i.i.d. draws from q1, given per-draw log q1 at the drawn
+    classes.  Stable at both ends: q1 -> 0 gives log(P q1) (log1p + expm1,
+    no cancellation), q1 -> 1 gives 0."""
+    log1m_q1 = jnp.log1p(-jnp.minimum(jnp.exp(logq1), 1.0))
+    return jnp.log(-jnp.expm1(pool_size * log1m_q1))
+
+
+@dataclasses.dataclass(frozen=True)
+class TapasSampler(Sampler):
+    """TAPAS-style two-pass mega-batch sampler (Bai et al. 2017, arXiv
+    1707.03073; DESIGN.md §2.8).
+
+    Pass 1 draws ``pool`` i.i.d. candidates through the (cheap, possibly
+    batch-shared) ``base`` family; pass 2 re-scores the pool against each
+    example's hidden state and resamples ``m`` slots per example from the
+    per-slot categorical
+
+        s_k = o_k / tau - log pi_k - log c_k
+
+    where ``pi_k`` is the pool-inclusion probability of slot k's class
+    (``pool_log_inclusion``) and ``c_k`` its multiplicity in the pool.
+    Summing duplicate slots, the per-CLASS conditional is
+    q2(j | pool) ∝ exp(o_j / tau) / pi_j over the pool's distinct classes,
+    so the composed probability reported as ``logq`` is
+
+        log pi_j + log q2(j | pool) = o_j / tau - logsumexp(s).
+
+    That composition is a Horvitz-Thompson estimator: for any f,
+    E_pool E_{j~q2}[ f(j) / (pi_j q2(j|pool)) ]
+      = E_pool [ sum_{j in distinct(pool)} f(j) / pi_j ] = sum_j f(j),
+    so the eq. 2 partition estimate is EXACTLY unbiased for any pool size
+    and any base q — and at tau = 1 the corrected logit o_j - logq_j is
+    CONSTANT across draws, so the resample stage adds zero conditional
+    variance on top of the pool (DESIGN.md §2.8).
+
+    Runtime state is ``{"base": <base runtime>, "w": (n, d) scoring table,
+    "n_valid": ()}`` — pass 2 needs the head table itself, which is why the
+    family overrides ``island_runtime`` (the train island and the facade
+    hand it the stop-gradiented gathered head).  The CARRIED state is the
+    base family's, delegated verbatim, so tree/block/rff bases keep their
+    TrainState/checkpoint/refresh behavior unchanged.
+    """
+
+    base: Sampler = dataclasses.field(
+        default_factory=lambda: BlockSampler(shared=True))
+    pool: int = 1024
+    tau: float = 1.0
+    name: str = "tapas"
+    two_stage = True
+
+    def __post_init__(self):
+        if getattr(self.base, "two_stage", False):
+            raise ValueError(
+                "tapas pools cannot nest: base must be a single-stage "
+                f"sampler, got '{self.base.name}'")
+        if self.pool <= 0:
+            raise ValueError(f"tapas pool size must be > 0, got {self.pool}")
+        if self.tau <= 0:
+            raise ValueError(f"tapas tau must be > 0, got {self.tau}")
+
+    # -- carried-state protocol: delegated to the base family ----------------
+    @property
+    def carries_state(self) -> bool:  # type: ignore[override]
+        return self.base.carries_state
+
+    def init_const(self, key, d):
+        return self.base.init_const(key, d)
+
+    def build_stats(self, w, n_valid, const):
+        return self.base.build_stats(w, n_valid, const)
+
+    def state_shapes(self, cfg, tp):
+        return self.base.state_shapes(cfg, tp)
+
+    def state_specs(self, cfg, tp, axis="model"):
+        return self.base.state_specs(cfg, tp, axis=axis)
+
+    def hydrate(self, state, n_valid):
+        raise TypeError(
+            "tapas pass 2 re-scores against the head table; build runtime "
+            "state with island_runtime(state, head, n_valid) — or init/"
+            "refresh outside the island")
+
+    def supports_head_loss(self) -> bool:
+        return self.base.supports_head_loss()
+
+    def island_runtime(self, state, head_full, n_valid):
+        return {"base": self.base.island_runtime(state, head_full, n_valid),
+                "w": head_full, "n_valid": n_valid}
+
+    # -- runtime form --------------------------------------------------------
+    def init(self, key, w):
+        return {"base": self.base.init(key, w), "w": w,
+                "n_valid": jnp.asarray(w.shape[0], jnp.int32)}
+
+    def refresh(self, state, w):
+        return {"base": self.base.refresh(state["base"], w), "w": w,
+                "n_valid": state["n_valid"]}
+
+    def draw_pool(self, state, h: Array, key: Array) -> tuple[Array, Array]:
+        """Pass 1: (pool,) candidate ids + exact per-draw log q1.
+
+        Batch-shared bases draw their native batch-summed shared set;
+        per-example bases draw one pool from the mean query — ANY fixed
+        pool distribution keeps the composed q exact (class docstring),
+        the choice only moves bias-of-q."""
+        if self.base.shares_negatives:
+            return self.base.sample_batch(state["base"], h, self.pool, key)
+        return self.base.sample(state["base"], jnp.mean(h, axis=0),
+                                self.pool, key)
+
+    def resample_from_pool(self, state, pool_ids: Array, logq1: Array,
+                           h: Array, m: int, key: Array
+                           ) -> tuple[Array, Array]:
+        """Pass 2: (T, m) ids + the composed pool x resample logq."""
+        logpi = pool_log_inclusion(logq1, self.pool)               # (P,)
+        counts = jnp.zeros((state["w"].shape[0],), jnp.int32
+                           ).at[pool_ids].add(1)
+        mult = counts[pool_ids]       # multiplicity via O(P) scatter, not P^2
+        w = state["w"].astype(jnp.float32)
+        o = (h.astype(jnp.float32) @ w[pool_ids].T) / self.tau     # (T, P)
+        s = o - (logpi + jnp.log(mult.astype(jnp.float32)))[None, :]
+        slots = categorical_rows(key, s, m)
+        logq = (jnp.take_along_axis(o, slots, axis=1)
+                - jax.nn.logsumexp(s, axis=-1)[:, None])
+        return pool_ids[slots], logq
+
+    def sample(self, state, h, m, key):
+        ids, logq = self.sample_batch(state, h[None, :], m, key)
+        return ids[0], logq[0]
+
+    def sample_batch(self, state, h, m, key):
+        k_pool, k_draw = jax.random.split(key)
+        pool_ids, logq1 = self.draw_pool(state, h, k_pool)
+        return self.resample_from_pool(state, pool_ids, logq1, h, m, k_draw)
+
+
 # --- registry ----------------------------------------------------------------
 # One source of truth for sampler construction: each family pairs its
 # keyword constructor with the cfg-aware construction the train island and
@@ -659,6 +826,16 @@ def _rff_from_cfg(cfg) -> Sampler:
                       leaf_size=cfg.sampler_block)
 
 
+def _tapas_from_cfg(cfg) -> Sampler:
+    if cfg.tapas_base == "tapas":
+        raise ValueError(
+            "tapas pools cannot nest: cfg.tapas_base must name a "
+            "single-stage family")
+    fam = _lookup(cfg.tapas_base)
+    base = fam.from_cfg(cfg) if fam.from_cfg is not None else fam.ctor()
+    return TapasSampler(base=base, pool=cfg.tapas_pool, tau=cfg.tapas_tau)
+
+
 @dataclasses.dataclass(frozen=True)
 class _Family:
     ctor: Callable[..., Sampler]
@@ -682,6 +859,7 @@ _REGISTRY: dict[str, _Family] = {
         partial(BlockSampler, shared=True),
         partial(_block_from_cfg, shared=True)),
     "rff": _Family(RFFSampler, _rff_from_cfg),
+    "tapas": _Family(TapasSampler, _tapas_from_cfg),
 }
 
 #: registered families that do NOT satisfy the shared Sampler protocol.

@@ -105,11 +105,12 @@ def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
              else empty_state())
 
     def _local_state(sampler_state: SamplerState, head_full, n_valid):
-        """Runtime sampling state inside the island (either hydrated from
-        the carried pytree or rebuilt from the gathered head)."""
-        if carries_stats:
-            return sampler.hydrate(sampler_state, n_valid)
-        return sampler.island_state(lax.stop_gradient(head_full), n_valid)
+        """Runtime sampling state inside the island: ONE protocol call —
+        the sampler hydrates its carried pytree, rebuilds from the gathered
+        head, or (multi-stage families) keeps the head table for pool
+        re-scoring (Sampler.island_runtime)."""
+        return sampler.island_runtime(sampler_state,
+                                      lax.stop_gradient(head_full), n_valid)
 
     # --- stats refresh (no gradients; runs once per step, before the
     # microbatch loop, so all microbatches sample from the SAME q) ----------

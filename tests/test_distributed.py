@@ -68,6 +68,17 @@ def test_rff_sampler_sharded_train():
 
 
 @pytest.mark.slow
+def test_tapas_sampler_sharded_train():
+    """TAPAS two-pass sampler on the mesh: the "sample → all-gather pool →
+    re-score → resample" loss equals a single-host reconstruction over the
+    union of per-shard pool draws, pool-gather gradients reach the owning
+    shards, and 2x4-mesh train steps run with the base family's carried
+    statistics (DESIGN.md §2.8)."""
+    out = _run("check_tapas_train.py")
+    assert "TAPAS TRAIN CHECKS PASSED" in out
+
+
+@pytest.mark.slow
 def test_decode_topk_sharded():
     """Hierarchy-backed top-k decode on a 2x4 mesh: P('model') index layout,
     per-shard beam + cross-shard merge == dense sharded top-k at full beam,

@@ -23,6 +23,9 @@ FAMILIES = {
     "block-quadratic": {"z", "cnt", "wq"},
     "block-quadratic-shared": {"z", "cnt", "wq"},
     "rff": {"features", "aux", "wq"},
+    # two-stage pool sampler: carried state delegated verbatim to its pass-1
+    # base family (default block-quadratic-shared)
+    "tapas": {"z", "cnt", "wq"},
     "uniform": set(),
     "softmax": set(),
 }

@@ -15,6 +15,12 @@ stays green.  For each family this suite:
     empirical marginals match the BRUTE-FORCE kernel distribution — the
     paper's §3.2.1 telescoping-product identity, end to end.
 
+The multi-stage (tapas) section extends the same contract to a COMPOSED q:
+stage-2 frequencies against the dense conditional oracle on fixed and real
+pools, per-draw composed logq against the inclusion x resample oracle, and
+the estimator-level consequence (exact partition unbiasedness with zero
+conditional variance at tau = 1).
+
 Seeds rotate via ``REPRO_STATS_SEED`` (the scheduled CI job runs 0/1/2) so
 tolerance flakiness surfaces there before it can gate tier-1.  Heavy cases
 (n = 512) are marked ``slow``.
@@ -29,7 +35,7 @@ import pytest
 
 from repro.core import blocks, tree
 from repro.core.kernel_fns import quadratic_kernel
-from repro.core.samplers import make_sampler
+from repro.core.samplers import make_sampler, pool_log_inclusion
 
 SEED = int(os.environ.get("REPRO_STATS_SEED", "0"))
 
@@ -223,6 +229,159 @@ def test_rff_q_tracks_softmax_closer_than_quadratic():
     assert np.mean(tv_rff) < np.mean(tv_quad), (
         f"rff q should track softmax closer than quadratic: "
         f"rff={np.mean(tv_rff):.3f} quad={np.mean(tv_quad):.3f}")
+
+
+# --- multi-stage (tapas) composed-q exactness --------------------------------
+# The two-pass family's logq is a COMPOSED probability (pool inclusion x
+# conditional resample), so the gate splits the same way the scheme does:
+#   * stage 2 on a FIXED pool vs the exactly-computable dense conditional
+#     q2(. | pool) (frequencies + per-draw logq, tight),
+#   * the full two-pass scheme vs the brute-force conditional oracle
+#     accumulated over every REAL pool the sampler drew (pool randomness is
+#     conditioned out, so the chi-square gate stays sharp),
+#   * the estimator-level consequence: the eq. 2 partition estimate is
+#     exactly unbiased, and at tau = 1 each call's estimate collapses to
+#     the Horvitz-Thompson pool sum (zero conditional variance, §2.8).
+
+TAPAS_POOL = 48  # < N * E[pi] coverage: pools stay partial, inclusion varies
+TAPAS_BASES = ["uniform", "block-quadratic-shared"]
+
+
+def _tapas_setup(base_name, pool=TAPAS_POOL, tau=1.0):
+    key = jax.random.PRNGKey(800 + SEED)
+    w, h = _w_h(key)
+    kwargs = {"block_size": 16} if base_name.startswith("block") else {}
+    sampler = make_sampler("tapas", base=make_sampler(base_name, **kwargs),
+                           pool=pool, tau=tau)
+    state = sampler.init(jax.random.fold_in(key, 2), w)
+    return sampler, state, w, h
+
+
+def _dense_conditional(sampler, state, pool_ids, logq1, h):
+    """Brute-force dense oracle for one realized pool: per-class conditional
+    q2(. | pool) (T, N) and the composed per-class log q (T, N), computed
+    from scratch (inclusion + multiplicity + re-score) in fp32."""
+    logpi = np.asarray(pool_log_inclusion(logq1, sampler.pool), np.float64)
+    pool_np = np.asarray(pool_ids)
+    mult = (pool_np[None, :] == pool_np[:, None]).sum(0)
+    o = np.asarray(jnp.einsum(
+        "td,pd->tp", h.astype(jnp.float32),
+        state["w"].astype(jnp.float32)[pool_ids]) / sampler.tau, np.float64)
+    s = o - (logpi + np.log(mult))[None, :]
+    lz = np.log(np.exp(s - s.max(-1, keepdims=True)).sum(-1)) + s.max(-1)
+    q2_slots = np.exp(s - lz[:, None])                      # (T, P)
+    q2_class = np.zeros((h.shape[0], N))
+    composed = np.full((h.shape[0], N), -np.inf)
+    for t in range(h.shape[0]):
+        np.add.at(q2_class[t], pool_np, q2_slots[t])
+        composed[t, pool_np] = o[t] - lz[t]                 # dup-safe: equal
+    return q2_class, composed
+
+
+@pytest.mark.parametrize("base_name", TAPAS_BASES)
+def test_tapas_stage2_conditional_matches_dense_oracle(base_name):
+    """Fixed pool: resample frequencies follow the dense q2(. | pool) and the
+    reported composed logq equals the dense composed oracle at the draws."""
+    sampler, state, w, h = _tapas_setup(base_name)
+    pool_ids, logq1 = sampler.draw_pool(state, h,
+                                        jax.random.PRNGKey(11 + SEED))
+    q2_class, composed = _dense_conditional(sampler, state, pool_ids,
+                                            logq1, h)
+    ids, logq = sampler.resample_from_pool(state, pool_ids, logq1, h,
+                                           DRAWS, jax.random.PRNGKey(13))
+    assert ids.shape == (T, DRAWS) and logq.shape == (T, DRAWS)
+    for t in range(T):
+        assert abs(q2_class[t].sum() - 1.0) < 1e-6, (
+            "dense conditional not normalized")
+        np.testing.assert_allclose(
+            np.asarray(logq[t]), composed[t, np.asarray(ids[t])],
+            rtol=1e-5, atol=1e-5,
+            err_msg=f"tapas[{base_name}]: composed logq disagrees with the "
+                    "dense pool-inclusion x conditional oracle")
+        # composed probs sum to the pool's total inclusion-weighted mass <= 1
+        mass = np.exp(composed[t][np.isfinite(composed[t])]).sum()
+        assert 0.0 < mass <= 1.0 + 1e-6
+        _check_against(np.asarray(ids[t]), q2_class[t],
+                       f"tapas[{base_name}] stage 2 [query {t}]")
+
+
+@pytest.mark.parametrize("base_name", TAPAS_BASES)
+def test_tapas_two_pass_frequencies_match_bruteforce_oracle(base_name):
+    """The full composed scheme through ``sample_batch``-equivalent calls:
+    draw counts over R real pools vs the brute-force conditional expectation
+    sum_r m * q2(. | pool_r) accumulated over the SAME pools."""
+    sampler, state, w, h = _tapas_setup(base_name)
+    h1 = h[:1]
+    R, m = 300, 200
+
+    def one(k):
+        kp, kd = jax.random.split(k)  # = sample_batch's split (pinned below)
+        pool_ids, lq1 = sampler.draw_pool(state, h1, kp)
+        ids, _ = sampler.resample_from_pool(state, pool_ids, lq1, h1, m, kd)
+        logpi = pool_log_inclusion(lq1, sampler.pool)
+        mult = jnp.sum(pool_ids[None, :] == pool_ids[:, None], axis=0)
+        o = (h1.astype(jnp.float32)
+             @ state["w"].astype(jnp.float32)[pool_ids].T) / sampler.tau
+        s = o - (logpi + jnp.log(mult.astype(jnp.float32)))[None, :]
+        q2 = jnp.zeros((N,)).at[pool_ids].add(jax.nn.softmax(s[0]))
+        return ids[0], q2
+
+    keys = jax.random.split(jax.random.PRNGKey(17 + SEED), R)
+    ids_all, q2_all = jax.jit(jax.vmap(one))(keys)
+    counts = np.bincount(np.asarray(ids_all).reshape(-1), minlength=N)
+    expected_q = np.asarray(q2_all, np.float64).mean(0)
+    assert abs(expected_q.sum() - 1.0) < 1e-4
+    _check_counts(counts, expected_q,
+                  f"tapas[{base_name}] two-pass vs brute-force oracle", R * m)
+
+
+def test_tapas_sample_batch_is_pool_then_resample():
+    """The public entry point IS the audited composition: one key split,
+    pool from the first half, resample from the second."""
+    sampler, state, w, h = _tapas_setup("block-quadratic-shared")
+    key = jax.random.PRNGKey(23 + SEED)
+    ids, logq = sampler.sample_batch(state, h, 64, key)
+    kp, kd = jax.random.split(key)
+    pool_ids, lq1 = sampler.draw_pool(state, h, kp)
+    ids2, logq2 = sampler.resample_from_pool(state, pool_ids, lq1, h, 64, kd)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids2))
+    np.testing.assert_array_equal(np.asarray(logq), np.asarray(logq2))
+    # per-example sample() composes the same scheme at T = 1
+    ids1, logq1 = sampler.sample(state, h[0], 64, key)
+    assert ids1.shape == (64,) and logq1.shape == (64,)
+
+
+@pytest.mark.parametrize("base_name", TAPAS_BASES)
+def test_tapas_partition_estimate_unbiased_zero_cond_variance(base_name):
+    """Estimator-level exactness (the reason the composed q is worth the
+    bookkeeping): mean_b exp(o_b - logq_b) is an exactly unbiased estimate
+    of Z = sum_j exp(o_j), and at tau = 1 the corrected logit o - logq is
+    CONSTANT within a call — the estimate equals the Horvitz-Thompson sum
+    over the pool's distinct classes, so the resample stage contributes
+    zero conditional variance (DESIGN.md §2.8)."""
+    sampler, state, w, h = _tapas_setup(base_name)
+    h0 = h[0]
+    logits = np.asarray(h0 @ w.T, np.float64)
+    z_true = np.exp(logits).sum()
+    reps, m = 400, 32
+
+    def one(k):
+        ids, logq = sampler.sample(state, h0, m, k)
+        o = (h0.astype(jnp.float32)
+             @ state["w"].astype(jnp.float32)[ids].T)
+        corrected = o - logq
+        return (jnp.mean(jnp.exp(corrected)),
+                jnp.max(corrected) - jnp.min(corrected))
+    z_hat, spread = jax.jit(jax.vmap(one))(
+        jax.random.split(jax.random.PRNGKey(29 + SEED), reps))
+    z_hat = np.asarray(z_hat, np.float64)
+    rel = abs(z_hat.mean() - z_true) / z_true
+    assert rel < 0.03, (
+        f"tapas[{base_name}]: partition estimate biased: "
+        f"E[Zhat]={z_hat.mean():.4f} vs Z={z_true:.4f} (rel {rel:.3f})")
+    assert float(np.max(np.asarray(spread))) < 1e-3, (
+        "tau=1 corrected logits not constant within a call — the composed "
+        "logq is not o - logsumexp(s)")
 
 
 @pytest.mark.slow
