@@ -84,6 +84,17 @@ def main() -> None:
                     out_dir, t0)
 
     t0 = time.time()
+    print("\n# serving (engine SLO load, DESIGN.md §5.1) — "
+          "path/n/concurrency -> p50/p99/qps")
+    from benchmarks import serving
+    emit_bench_json(
+        "serving",
+        serving.run(ns=(256,), concurrency=(2, 4), queries=64,
+                    pool_size=16, buckets=(1, 2, 4), cache_size=32)
+        if smoke else serving.run(),
+        out_dir, t0)
+
+    t0 = time.time()
     print("\n# kernel_bench — name,us_per_call,derived")
     from benchmarks import kernel_bench
     emit_bench_json("kernel_bench", kernel_bench.run(), out_dir, t0)

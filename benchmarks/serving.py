@@ -1,0 +1,199 @@
+"""SLO load benchmark for the async serving engine (DESIGN.md §5.1).
+
+Closed-loop load generator: ``concurrency`` client threads each draw a
+query from a ZIPFIAN pool (recsys traffic — a few hot users dominate,
+the youtube-dnn scenario), submit it, wait for the answer, repeat.  Rows
+report p50/p99 request latency and sustained QPS per
+
+    path x n x concurrency
+
+for the dense O(n d) head and the hierarchy index, plus one row per n that
+drives the same load WHILE the index is swapped repeatedly mid-stream
+(each row carries its steady counterpart in ``p99_steady_ms`` so the diff
+is one subtraction).  The swap itself is one reference assignment — the
+delta this row shows is the CACHE-INVALIDATION churn (version-scoped keys:
+every swap implicitly flushes the hot-query cache, so a 20 Hz republish
+rate deliberately measures the worst case), not decode downtime; the
+never-mixed/never-failed atomicity contract is asserted in
+tests/test_serving_engine.py, this row prices it.
+
+Engine-side counters ride along in each row (batch occupancy, cache hit
+rate, expired count) so a latency regression can be attributed — e.g. a
+p99 jump with falling occupancy points at batching, one with a falling
+hit rate at the cache.
+
+On CPU the absolute numbers are not meaningful (the dense matmul is BLAS,
+the gathers are not); the benchmark's value is the TRAJECTORY across
+commits and the swap-vs-steady comparison, both hardware-relative.
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import threading
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.decode_topk import clustered_table
+from repro.serve import retrieval
+from repro.serve.server import ServingEngine
+from repro.sharding.rules import local_ctx
+
+CTX = local_ctx()
+
+
+def zipf_pool(rng: np.random.Generator, pool_size: int,
+              a: float = 1.1) -> np.ndarray:
+    """Zipf(a) probabilities over a pool of distinct queries."""
+    ranks = np.arange(1, pool_size + 1, dtype=np.float64)
+    p = ranks ** -a
+    return p / p.sum()
+
+
+def _decode_fn(w: np.ndarray, k: int, n: int):
+    def decode(index, h):
+        if index is None:
+            return retrieval.dense_topk(w, h, k, n_valid=n)
+        return retrieval.decode_topk(index, h, k, None, CTX)
+
+    return decode
+
+
+def _drive(eng: ServingEngine, pool: np.ndarray, probs: np.ndarray,
+           n_queries: int, concurrency: int, seed: int) -> dict:
+    """Run the closed loop; returns latency percentiles + sustained QPS."""
+    lat: list[float] = []
+    errors = [0]
+    lock = threading.Lock()
+    counter = itertools.count()
+
+    def client(tid: int) -> None:
+        rng = np.random.default_rng(seed + tid)
+        while next(counter) < n_queries:
+            q = pool[rng.choice(len(pool), p=probs)]
+            r = eng.decode(q, timeout=300.0)
+            with lock:
+                if r.ok:
+                    lat.append(r.latency_ms)
+                else:
+                    errors[0] += 1
+
+    threads = [threading.Thread(target=client, args=(t,))
+               for t in range(concurrency)]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    wall = time.perf_counter() - t0
+    arr = np.sort(np.asarray(lat)) if lat else np.zeros(1)
+    return {
+        "p50_ms": float(np.percentile(arr, 50)),
+        "p99_ms": float(np.percentile(arr, 99)),
+        "qps": len(lat) / wall if wall > 0 else 0.0,
+        "ok": len(lat),
+        "errors": errors[0],
+    }
+
+
+def run(ns=(4096, 16384), concurrency=(4, 16), queries=600, d=64, k=10,
+        pool_size=64, buckets=(1, 2, 4, 8, 16), cache_size=256,
+        swap_every_s=0.05, quiet=False) -> list[dict]:
+    rows: list[dict] = []
+    for n in ns:
+        w = np.asarray(clustered_table(jax.random.PRNGKey(0), n, d),
+                       np.float32)
+        index = retrieval.build_index(w, CTX)
+        rng = np.random.default_rng(1)
+        pool = rng.normal(size=(pool_size, d)).astype(np.float32)
+        probs = zipf_pool(rng, pool_size)
+
+        for path, idx in (("dense", None), ("index", index)):
+            for conc in concurrency:
+                eng = ServingEngine(_decode_fn(w, k, n), d, k,
+                                    buckets=buckets, max_wait_ms=2.0,
+                                    default_deadline_ms=300_000.0,
+                                    cache_size=cache_size, index=idx).start()
+                try:
+                    stats = _drive(eng, pool, probs, queries, conc,
+                                   seed=7 * conc)
+                    c = eng.counters()
+                finally:
+                    eng.stop()
+                row = {
+                    "path": path, "n": int(n), "concurrency": int(conc),
+                    "p50_ms": round(stats["p50_ms"], 3),
+                    "p99_ms": round(stats["p99_ms"], 3),
+                    "qps": round(stats["qps"], 1),
+                    "queries": stats["ok"], "errors": stats["errors"],
+                    "batch_occupancy": round(c["batch_occupancy"], 3),
+                    "cache_hit_rate": round(c["cache_hit_rate"], 3),
+                    "expired": c["expired"],
+                }
+                rows.append(row)
+                if not quiet:
+                    print(f"  {path:10s} n={n:6d} conc={conc:3d} "
+                          f"p50={row['p50_ms']:8.2f}ms "
+                          f"p99={row['p99_ms']:8.2f}ms "
+                          f"qps={row['qps']:8.1f} "
+                          f"occ={row['batch_occupancy']:.2f} "
+                          f"hit={row['cache_hit_rate']:.2f}")
+
+        # --- swap-under-load: same stream, index republished continuously --
+        conc = max(concurrency)
+        steady = next(r for r in rows
+                      if r["path"] == "index" and r["n"] == n
+                      and r["concurrency"] == conc)
+        eng = ServingEngine(_decode_fn(w, k, n), d, k, buckets=buckets,
+                            max_wait_ms=2.0, default_deadline_ms=300_000.0,
+                            cache_size=cache_size, index=index).start()
+        stop_swapping = threading.Event()
+
+        def swapper() -> None:
+            v = 0
+            while not stop_swapping.is_set():
+                v += 1
+                eng.swap_index(index, version=v, train_step=v)
+                stop_swapping.wait(swap_every_s)
+
+        th = threading.Thread(target=swapper)
+        th.start()
+        try:
+            stats = _drive(eng, pool, probs, queries, conc, seed=991)
+            c = eng.counters()
+        finally:
+            stop_swapping.set()
+            th.join()
+            eng.stop()
+        row = {
+            "path": "index_swap", "n": int(n), "concurrency": int(conc),
+            "p50_ms": round(stats["p50_ms"], 3),
+            "p99_ms": round(stats["p99_ms"], 3),
+            "qps": round(stats["qps"], 1),
+            "queries": stats["ok"], "errors": stats["errors"],
+            "batch_occupancy": round(c["batch_occupancy"], 3),
+            "cache_hit_rate": round(c["cache_hit_rate"], 3),
+            "expired": c["expired"],
+            "swaps": c["index_swaps"],
+            "p99_steady_ms": steady["p99_ms"],
+        }
+        rows.append(row)
+        if not quiet:
+            print(f"  {'index_swap':10s} n={n:6d} conc={conc:3d} "
+                  f"p50={row['p50_ms']:8.2f}ms p99={row['p99_ms']:8.2f}ms "
+                  f"qps={row['qps']:8.1f} swaps={row['swaps']} "
+                  f"(steady p99={row['p99_steady_ms']:.2f}ms)")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        run(ns=(256,), concurrency=(2, 4), queries=64, pool_size=16,
+            buckets=(1, 2, 4), cache_size=32)
+    else:
+        run()

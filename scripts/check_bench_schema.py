@@ -37,6 +37,9 @@ ROW_SCHEMAS = {
     "grad_bias": {"sampler": str, "m": numbers.Integral,
                   "bias_linf": numbers.Real, "bias_l2": numbers.Real},
     "convergence_speed": {"name": str, "curve": list},
+    "serving": {"path": str, "n": numbers.Integral,
+                "concurrency": numbers.Integral, "p50_ms": numbers.Real,
+                "p99_ms": numbers.Real, "qps": numbers.Real},
     "roofline": None,  # free-form analysis dict per row
 }
 

@@ -14,10 +14,24 @@ checkpoint) raises a pointed KeyError instead of a bare npz miss.
 Properties needed for 1000+-node operation, and how this module provides
 their single-host form:
 
-  * atomicity      — write to step_XXXX.tmp, fsync, os.replace (a crashed
-                     writer never produces a readable-but-corrupt step);
+  * atomicity      — write to step_XXXX.tmp, fsync EVERY artifact (both
+                     payload files, the tmp directory entry list, and the
+                     parent directory after the rename), THEN os.replace: a
+                     crash at any point leaves either no step or a fully
+                     durable one, never a renamed-but-unflushed
+                     (readable-but-corrupt) directory.  A re-save onto a
+                     step whose final directory already exists (a crashed
+                     run relaunched at the same cadence) replaces it
+                     instead of dying in os.replace on the non-empty
+                     destination;
   * async          — device->host gather is synchronous (cheap), the disk
-                     write runs on a background thread; `wait()` joins;
+                     write runs on a background thread; `wait()` joins and
+                     RE-RAISES any background write failure (a silently
+                     dropped checkpoint is a corrupt restart waiting to
+                     happen).  save() always joins the previous writer
+                     before launching the next — two write() bodies must
+                     never overlap, or writer B's keep-K GC can delete
+                     writer A's in-flight step;
   * keep-K GC      — bounded disk usage;
   * elastic restore— arrays are stored as LOGICAL tensors; restore places
                      them with WHATEVER mesh/shardings the restarted job
@@ -48,12 +62,25 @@ def _flatten(tree: Any) -> dict[str, np.ndarray]:
     return out
 
 
+def _fsync_dir(path: str) -> None:
+    """Flush a DIRECTORY's entry list — file fsyncs make the bytes durable,
+    but the files' existence (and a rename into the directory) only becomes
+    durable when the directory inode itself is synced."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+        self._launch_lock = threading.Lock()
 
     # -- write ---------------------------------------------------------------
     def save(self, step: int, state: Any, extra: dict | None = None,
@@ -66,34 +93,69 @@ class CheckpointManager:
             "keys": sorted(arrays.keys()),
             "treedef": str(treedef),
         }
-        self.wait()
 
         def write():
             final = os.path.join(self.directory, f"step_{step:08d}")
             tmp = final + ".tmp"
             if os.path.exists(tmp):
-                shutil.rmtree(tmp)
+                shutil.rmtree(tmp)  # a previous crash's debris
             os.makedirs(tmp)
-            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            # Durability order: payload bytes -> payload file entries in
+            # tmp -> rename -> rename's directory entry.  Skipping any
+            # fsync lets a crash produce a step that LISTS as complete but
+            # reads back truncated — the exact corruption the .tmp dance
+            # exists to prevent.
+            with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+                np.savez(f, **arrays)
+                f.flush()
+                os.fsync(f.fileno())
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(manifest, f)
                 f.flush()
                 os.fsync(f.fileno())
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.replace(tmp, final)
+            _fsync_dir(tmp)
+            try:
+                os.replace(tmp, final)
+            except OSError:
+                # Non-empty destination: this step was already (perhaps
+                # partially) written by a crashed run that relaunched at
+                # the same cadence.  Clear it and retry — the re-save must
+                # win, not die.
+                shutil.rmtree(final, ignore_errors=True)
+                os.replace(tmp, final)
+            _fsync_dir(self.directory)
             self._gc()
 
         if blocking:
+            self.wait()
             write()
-        else:
-            self._thread = threading.Thread(target=write, daemon=True)
+            return
+        with self._launch_lock:
+            # Join the previous writer FIRST: overlapping write() bodies
+            # race — the newer thread's _gc can delete the older thread's
+            # still-renaming step.
+            self.wait()
+            self._thread = threading.Thread(target=self._run_write(write),
+                                            daemon=True)
             self._thread.start()
+
+    def _run_write(self, write):
+        def runner():
+            try:
+                write()
+            except BaseException as e:  # noqa: BLE001
+                self._error = e  # surfaced by the next wait()/save()
+
+        return runner
 
     def wait(self) -> None:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                "background checkpoint write failed") from err
 
     def _gc(self) -> None:
         steps = self.all_steps()

@@ -1,6 +1,7 @@
 from repro.serve.engine import (  # noqa: F401
     make_prefill_step,
     make_decode_step,
+    make_decode_fn,
     make_topk_step,
     decode_topk,
     abstract_decode_inputs,
@@ -10,4 +11,10 @@ from repro.serve.retrieval import (  # noqa: F401
     RetrievalIndex,
     build_index,
     recall_at_k,
+)
+from repro.serve.server import (  # noqa: F401
+    IndexRefresher,
+    LatencyHistogram,
+    ServeResult,
+    ServingEngine,
 )

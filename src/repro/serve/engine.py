@@ -116,6 +116,20 @@ def make_topk_step(cfg: ArchConfig, ctx: ShardCtx, k: int, *,
     return step
 
 
+def make_decode_fn(cfg: ArchConfig, ctx: ShardCtx, head, k: int, *,
+                   beam: int | None = None):
+    """``decode(index, h (B, d)) -> (ids, logits)`` for the async serving
+    engine (``serve/server.py``): the index rides as a PYTREE ARGUMENT so
+    the engine's double-buffered swap re-binds buffers without recompiling
+    — only the microbatch bucket shapes (and the dense ``index=None``
+    treedef) ever compile.  ``index=None`` serves the dense head path."""
+
+    def decode(index, h2d):
+        return decode_topk(cfg, ctx, head, h2d, k, index=index, beam=beam)
+
+    return decode
+
+
 def make_decode_step(cfg: ArchConfig, ctx: ShardCtx):
     """decode_step(params, token (B,1), caches, pos (B,)) ->
     (next_token (B,), caches)."""

@@ -20,6 +20,14 @@ Fault model (single-host simulation of the 1000+-node behaviors):
                        stragglers;
   * failure injection— `fail_at_step` raises mid-run; `slow_step_injection`
                        sleeps inside a step's timed region (test hooks).
+
+Metric reads are PIPELINED one step deep: reading `metrics["loss"]` on the
+host right after dispatch would fully synchronize every step (the classic
+`float(device_get(...))` anti-pattern) and forfeit host/device overlap.
+The loop instead flushes step i-1's metrics — blocking on device
+completion explicitly, so the straggler timer measures the device, not the
+host — after step i's batch is fetched and before step i's timed region
+opens, so a stall at step i can never be charged to step i-1.
 """
 from __future__ import annotations
 
@@ -73,19 +81,22 @@ def fit(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
     stragglers: list[int] = []
     durations: list[float] = []
     measured = 0  # steps timed in THIS process (restart recompiles too)
-    start = int(jax.device_get(state.step))
-    for i in range(start, steps):
-        if fail_at_step is not None and i == fail_at_step:
-            raise RuntimeError(f"injected failure at step {i}")
-        batch = next(data)
-        t0 = time.perf_counter()
-        if slow_step_injection and i in slow_step_injection:
-            time.sleep(slow_step_injection[i])  # test hook: fake straggler
-        state, metrics = step_fn(state, batch,
-                                 jax.random.fold_in(
-                                     jax.random.PRNGKey(seed + 1), i))
-        loss = float(jax.device_get(metrics["loss"]))
-        dt = time.perf_counter() - t0
+    # One-deep metrics pipeline: step i's loss is a DEVICE future; reading
+    # it immediately (float(device_get(...))) would fully synchronize every
+    # step and serialize host work against device compute.  Instead the
+    # dispatch is recorded as `pending` and materialized one iteration
+    # later, after step i+1's host-side batch fetch has overlapped the
+    # device compute.
+    pending: tuple[int, Any, float, TrainState] | None = None
+
+    def flush(p: tuple[int, Any, float, TrainState]) -> None:
+        nonlocal measured
+        i_p, metrics_p, t0_p, state_p = p
+        # The straggler timer measures DEVICE completion explicitly —
+        # block on the transferred scalar, then read the clock.
+        jax.block_until_ready(metrics_p["loss"])
+        dt = time.perf_counter() - t0_p
+        loss = float(jax.device_get(metrics_p["loss"]))
         losses.append(loss)
         # Straggler watchdog: compare to the running median of post-warmup
         # steps.  Warmup (compile) durations never enter the window — one
@@ -95,18 +106,39 @@ def fit(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
             if len(durations) >= straggler_min_window:
                 med = float(np.median(durations[-50:]))
                 if dt > straggler_factor * med:
-                    stragglers.append(i)
+                    stragglers.append(i_p)
             durations.append(dt)
         measured += 1
-        if log_every and i % log_every == 0:
+        if log_every and i_p % log_every == 0:
             extra_s = ""
             if eval_fn is not None:
-                extra_s = f" eval={eval_fn(state):.4f}"
-            print(f"step {i:5d} loss {loss:.4f} "
+                extra_s = f" eval={eval_fn(state_p):.4f}"
+            print(f"step {i_p:5d} loss {loss:.4f} "
                   f"({dt*1e3:.0f} ms){extra_s}", flush=True)
+
+    start = int(jax.device_get(state.step))
+    for i in range(start, steps):
+        if fail_at_step is not None and i == fail_at_step:
+            raise RuntimeError(f"injected failure at step {i}")
+        batch = next(data)
+        # Materialize step i-1's metrics BEFORE step i's timed region
+        # opens: an injected (or real) stall at step i must charge step i,
+        # never inflate the previous step's measured duration.
+        if pending is not None:
+            flush(pending)
+            pending = None
+        t0 = time.perf_counter()
+        if slow_step_injection and i in slow_step_injection:
+            time.sleep(slow_step_injection[i])  # test hook: fake straggler
+        state, metrics = step_fn(state, batch,
+                                 jax.random.fold_in(
+                                     jax.random.PRNGKey(seed + 1), i))
+        pending = (i, metrics, t0, state)
         if mgr is not None and (i + 1) % checkpoint_every == 0:
             mgr.save(i + 1, state,
                      extra={"step": i + 1, "data_state": data.state_dict()})
+    if pending is not None:
+        flush(pending)
     if mgr is not None:
         mgr.save(steps, state,
                  extra={"step": steps, "data_state": data.state_dict()},

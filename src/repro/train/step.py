@@ -277,6 +277,45 @@ def export_retrieval_index(state: TrainState, cfg: ArchConfig, ctx: ShardCtx,
                                  vocab_size=cfg.vocab_size)
 
 
+def serving_index_source(checkpoint_dir: str, cfg: ArchConfig, ctx: ShardCtx,
+                         opt: GradientTransform, *, max_len: int = 4096,
+                         leaf_size: int | None = None):
+    """The serving half of the train->serve refresh seam (DESIGN.md §5.1).
+
+    Returns ``poll() -> (RetrievalIndex, step) | None``: probe the
+    checkpoint directory, and when a step newer than the last one served
+    has landed COMPLETE (the manager only lists renamed, manifest-bearing
+    steps — the fsync/os.replace atomicity contract), restore it and
+    export a fresh unprojected index from its head table.  Returns None
+    when training hasn't advanced.  Built for the background
+    ``serve.server.IndexRefresher``: the restore + hierarchy build (the
+    expensive part) runs wherever ``poll`` is called — never on the decode
+    path — and the engine swap that follows is O(1).
+
+    The restore template is an ``eval_shape`` skeleton of the training
+    state — the serving process never allocates a training state; arrays
+    land straight from the npz.
+    """
+    from repro.checkpoint.manager import CheckpointManager
+
+    mgr = CheckpointManager(checkpoint_dir)
+    like = jax.eval_shape(
+        lambda _: init_train_state(jax.random.PRNGKey(0), cfg, ctx, opt,
+                                   max_len=max_len), 0)
+    last: dict[str, int | None] = {"step": None}
+
+    def poll():
+        step = mgr.latest_step()
+        if step is None or step == last["step"]:
+            return None
+        state, _ = mgr.restore(like=like, step=step)
+        last["step"] = step
+        return export_retrieval_index(state, cfg, ctx,
+                                      leaf_size=leaf_size), step
+
+    return poll
+
+
 def init_train_state(key, cfg: ArchConfig, ctx: ShardCtx,
                      opt: GradientTransform, max_len: int = 4096
                      ) -> TrainState:

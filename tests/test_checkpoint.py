@@ -1,10 +1,14 @@
-"""Checkpoint manager: roundtrip, atomicity, GC, async."""
+"""Checkpoint manager: roundtrip, atomicity, GC, async, crash durability."""
 import os
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from repro.checkpoint import manager as manager_mod
 from repro.checkpoint.manager import CheckpointManager
 
 
@@ -57,3 +61,113 @@ def test_no_tmp_dirs_left(tmp_path):
     mgr = CheckpointManager(str(tmp_path), keep=2)
     mgr.save(1, _state(1), blocking=True)
     assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
+def test_kill_during_save_restores_latest_complete(tmp_path, monkeypatch):
+    """Crash mid-write (before the rename): the half-written step must not
+    be listed or restorable; the latest COMPLETE step restores; a relaunch
+    re-saving the same step succeeds over the leftover debris."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(10, _state(10), blocking=True)
+
+    real_replace = os.replace
+
+    def killed_replace(src, dst):
+        raise RuntimeError("injected kill before rename")
+
+    monkeypatch.setattr(manager_mod.os, "replace", killed_replace)
+    with pytest.raises(RuntimeError, match="injected kill"):
+        mgr.save(20, _state(20), blocking=True)
+    monkeypatch.setattr(manager_mod.os, "replace", real_replace)
+
+    # the torn step never lists; the latest complete step restores
+    assert mgr.all_steps() == [10]
+    like = jax.tree_util.tree_map(jnp.zeros_like, _state(0))
+    restored, _ = mgr.restore(like=like)
+    assert int(restored["step"]) == 10
+
+    # relaunch at the same cadence: re-save of step 20 must win, even with
+    # the crashed attempt's step_00000020.tmp still on disk
+    mgr2 = CheckpointManager(str(tmp_path), keep=3)
+    mgr2.save(20, _state(20), blocking=True)
+    assert mgr2.all_steps() == [10, 20]
+    restored, _ = mgr2.restore(like=like)
+    assert int(restored["step"]) == 20
+
+
+def test_kill_during_async_save_surfaces_on_wait(tmp_path, monkeypatch):
+    """A background writer failure must raise at the next join, not vanish:
+    a silently dropped checkpoint is a corrupt restart waiting to happen."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+
+    def killed_replace(src, dst):
+        raise RuntimeError("injected async kill")
+
+    monkeypatch.setattr(manager_mod.os, "replace", killed_replace)
+    mgr.save(5, _state(5), blocking=False)
+    with pytest.raises(RuntimeError, match="background checkpoint write"):
+        mgr.wait()
+    assert mgr.all_steps() == []
+
+
+def test_resave_over_existing_final_dir(tmp_path, monkeypatch):
+    """A crashed run relaunched at the same cadence re-saves a step whose
+    FINAL directory already exists — os.replace alone dies on a non-empty
+    destination, the manager must replace it."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(7, _state(1), blocking=True)
+    # poke an extra file in so the dir is "foreign" non-empty
+    with open(tmp_path / "step_00000007" / "stray.txt", "w") as f:
+        f.write("debris")
+    mgr.save(7, _state(2), blocking=True)
+    like = jax.tree_util.tree_map(jnp.zeros_like, _state(0))
+    restored, _ = mgr.restore(like=like, step=7)
+    assert int(restored["step"]) == 2
+    assert not (tmp_path / "step_00000007" / "stray.txt").exists()
+
+
+def test_overlapping_async_saves_are_serialized(tmp_path, monkeypatch):
+    """A fast save cadence must never run two write() bodies concurrently —
+    writer B's keep-K GC could delete writer A's in-flight step."""
+    active, peak = [0], [0]
+    lock = threading.Lock()
+    real_savez = np.savez
+
+    def slow_savez(f, **arrays):
+        with lock:
+            active[0] += 1
+            peak[0] = max(peak[0], active[0])
+        time.sleep(0.02)
+        try:
+            return real_savez(f, **arrays)
+        finally:
+            with lock:
+                active[0] -= 1
+
+    monkeypatch.setattr(manager_mod.np, "savez", slow_savez)
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in range(1, 6):
+        mgr.save(s, _state(s), blocking=False)
+    mgr.wait()
+    assert peak[0] == 1, f"{peak[0]} write() bodies ran concurrently"
+    assert mgr.all_steps() == [4, 5]
+
+
+def test_fsync_contract(tmp_path, monkeypatch):
+    """The atomicity docstring promises fsync before os.replace: both
+    payload files, the tmp directory, and the parent directory after the
+    rename — all four must happen, and all file fsyncs before the rename."""
+    events = []
+    real_fsync, real_replace = os.fsync, os.replace
+    monkeypatch.setattr(
+        manager_mod.os, "fsync",
+        lambda fd: (events.append("fsync"), real_fsync(fd))[1])
+    monkeypatch.setattr(
+        manager_mod.os, "replace",
+        lambda s, d: (events.append("replace"), real_replace(s, d))[1])
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(1, _state(1), blocking=True)
+    ren = events.index("replace")
+    # arrays.npz + manifest.json + tmp dir before the rename; parent after
+    assert events[:ren].count("fsync") >= 3, events
+    assert "fsync" in events[ren:], events

@@ -88,6 +88,16 @@ def test_decode_topk_sharded():
 
 
 @pytest.mark.slow
+def test_serving_engine_on_mesh():
+    """ServingEngine over the mesh decode path: the B % dp != 0 replication
+    branch of ``engine.decode_topk`` (directly and through non-divisible
+    engine buckets), dense and index paths, and an atomic mid-run index
+    swap on the mesh (DESIGN.md §5.1)."""
+    out = _run("check_serving.py")
+    assert "SERVING CHECKS PASSED" in out
+
+
+@pytest.mark.slow
 def test_pure_fsdp_mode():
     """pure_fsdp: batch over the whole mesh, vocab-parallel head island,
     batch-spill onto the sequence dim for small batches."""
