@@ -165,6 +165,88 @@ def grad_bias(samplers=None, ms=(16, 64), n=256, d=12, n_queries=4,
     return rows
 
 
+def staleness_bias(ks=(0, 4, 16), ms=(16, 64), n=256, d=12, n_queries=4,
+                   reps=8000, lr=0.3, sgd_batch=64, seed=0, quiet=False):
+    """Eq. 5 bias when q is built from a k-step-STALE head (the refresh
+    island's overlap contract, DESIGN.md §7).
+
+    Evolves the toy softmax model by max(ks) full-softmax SGD steps, then
+    scores with the CURRENT head while sampling from the quadratic-oracle q
+    of the head k optimizer updates earlier — exactly what a step sees
+    under ``refresh_mode="overlap"`` with staleness k (k=0 is the sync
+    baseline; the sweep ks = {0, cadence, 4*cadence} brackets the island's
+    k..k+cadence-1 window).  The correction always uses the stale logq that
+    was actually sampled from, so the measured drift is bias-of-q only —
+    it grows smoothly with k instead of falling off a cliff, which is what
+    licenses the overlap default.  Rows add "staleness_k" to the grad_bias
+    schema."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.sampled_softmax import (
+        full_softmax_grad_wrt_logits,
+        sampled_softmax_grad_wrt_logits,
+    )
+    from repro.core.samplers import make_sampler
+
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (n, d)) * 0.5
+    hs = jax.random.normal(jax.random.fold_in(key, 1), (n_queries, d)) * 1.2
+
+    def ce(w_, h_, y_):
+        logits = h_ @ w_.T
+        return -jnp.mean(jax.nn.log_softmax(logits)[
+            jnp.arange(h_.shape[0]), y_])
+
+    gfn = jax.jit(jax.grad(ce))
+    horizon = max(ks)
+    traj = [w]
+    for t in range(horizon):
+        kt = jax.random.fold_in(key, 1000 + t)
+        hb = jax.random.normal(kt, (sgd_batch, d)) * 1.2
+        yb = jax.random.categorical(jax.random.fold_in(kt, 1),
+                                    hb @ traj[-1].T)
+        traj.append(traj[-1] - lr * gfn(traj[-1], hb, yb))
+    w_cur = traj[-1]
+
+    sampler = make_sampler("quadratic-oracle")
+    rows = []
+    for k in ks:
+        state = sampler.init(jax.random.fold_in(key, 2), traj[horizon - k])
+        acc = {m: ([], []) for m in ms}
+        for t in range(n_queries):
+            h = hs[t]
+            o = w_cur @ h
+            label = jax.random.categorical(
+                jax.random.fold_in(key, 10 + t), o)
+            full = full_softmax_grad_wrt_logits(o[None], label[None])[0]
+            logq = sampler.logq_all(state, h)  # the STALE head's q
+            logq = jnp.where(jnp.arange(n) == label, -jnp.inf, logq)
+            logq = logq - jax.nn.logsumexp(logq)
+            for m in ms:
+                def one(kk, m=m, logq=logq):
+                    ids = jax.random.categorical(kk, logq, shape=(m,))
+                    return sampled_softmax_grad_wrt_logits(
+                        o, label, ids, logq[ids], n=n)
+
+                keys = jax.random.split(
+                    jax.random.fold_in(key, 100 + t), reps)
+                diff = np.asarray(jax.vmap(one)(keys).mean(0) - full)
+                acc[m][0].append(np.abs(diff).max())
+                acc[m][1].append(np.linalg.norm(diff))
+        for m in ms:
+            rows.append({"sampler": "quadratic-oracle", "m": int(m),
+                         "staleness_k": int(k),
+                         "bias_linf": float(np.mean(acc[m][0])),
+                         "bias_l2": float(np.mean(acc[m][1]))})
+            if not quiet:
+                print(f"  grad-bias quadratic-oracle m={m:4d} stale_k={k:3d} "
+                      f"linf={rows[-1]['bias_linf']:.4f} "
+                      f"l2={rows[-1]['bias_l2']:.4f}", flush=True)
+    return rows
+
+
 def run(samplers=None, ms=(4, 16, 64), steps=400, out_json=None,
         arch="youtube-dnn", vocab=2048, quiet=False):
     samplers = samplers or SAMPLERS_DEFAULT
@@ -193,9 +275,11 @@ def main():
     args = ap.parse_args()
     if args.grad_bias_only:
         grad_bias(out_json=args.out)
+        staleness_bias()
         return
     if args.full:
         grad_bias(ms=(4, 16, 64, 256), reps=8000)
+        staleness_bias(ks=(0, 2, 4, 8, 16, 32), reps=8000)
         run(samplers=["uniform", "unigram", "softmax", "abs-softmax",
                       "block-quadratic", "quadratic-oracle",
                       "quartic-oracle", "rff"],

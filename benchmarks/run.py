@@ -111,11 +111,15 @@ def main() -> None:
 
     t0 = time.time()
     print("\n# grad_bias (eq. 5 estimator bias per family x m; "
-          "rff < quadratic at equal m)")
+          "rff < quadratic at equal m; + k-stale refresh-island rows)")
     from benchmarks import bias_vs_samples
-    emit_bench_json("grad_bias",
-                    bias_vs_samples.grad_bias(reps=200 if smoke else 5000),
-                    out_dir, t0)
+    emit_bench_json(
+        "grad_bias",
+        bias_vs_samples.grad_bias(reps=200 if smoke else 5000)
+        + bias_vs_samples.staleness_bias(
+            ks=(0, 4, 16), ms=(16,) if smoke else (16, 64),
+            reps=200 if smoke else 5000),
+        out_dir, t0)
 
     t0 = time.time()
     print("\n# bias_vs_samples (paper Fig. 2, quick mode)")

@@ -23,6 +23,67 @@ from repro.core.kernel_fns import quadratic_kernel
 from repro.core.samplers import BlockSampler, TapasSampler, softmax_oracle
 
 
+def refresh_overlap(n=256, quiet=False):
+    """Sync vs overlapped refresh through the REAL train step (DESIGN.md §7).
+
+    Sync mode pays the sampler-stat rebuild inside the jitted step (the
+    cadence select keeps both branches live, so the Gram matmul runs every
+    step); overlap mode's step carries the statistics untouched — the
+    rebuild runs as the loop's async island.  The step-time delta IS the
+    refresh spike the island hides; the island-rebuild row is the cost
+    that moved off the critical path."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.data.pipeline import batch_iterator_for
+    from repro.models import api
+    from repro.optim import make_optimizer
+    from repro.sharding.rules import local_ctx
+    from repro.train.step import (
+        init_train_state,
+        make_refresh_fn,
+        make_train_step,
+    )
+
+    base = get_config("youtube-dnn").reduced(
+        vocab_size=n, m_negatives=32, sampler_block=32,
+        tower_dims=(64, 32), user_feature_dim=64, history_len=3)
+    ctx = local_ctx()
+    opt = make_optimizer("adamw", 1e-2, weight_decay=0.0)
+    batch = next(batch_iterator_for(base, ctx, global_batch=64, seq_len=0))
+    key = jax.random.PRNGKey(0)
+
+    rows, us_by_mode = [], {}
+    for mode in ("sync", "overlap"):
+        cfg = dataclasses.replace(base, refresh_mode=mode,
+                                  sampler_refresh_every=4,
+                                  refresh_stale_steps=2)
+        state = init_train_state(jax.random.PRNGKey(0), cfg, ctx, opt,
+                                 max_len=8)
+        step = jax.jit(make_train_step(cfg, ctx, opt))
+        us_by_mode[mode] = time_fn(step, state, batch, key)
+    cfg_o = dataclasses.replace(base, refresh_mode="overlap",
+                                sampler_refresh_every=4,
+                                refresh_stale_steps=2)
+    state = init_train_state(jax.random.PRNGKey(0), cfg_o, ctx, opt,
+                             max_len=8)
+    refresh = jax.jit(make_refresh_fn(cfg_o, ctx))
+    us_refresh = time_fn(refresh, api.head_table(state.params, cfg_o),
+                         state.sampler_state)
+    spike = us_by_mode["sync"] - us_by_mode["overlap"]
+    rows.append(csv_row(f"refresh/train-step-sync/n={n}",
+                        us_by_mode["sync"], "rebuild inside the step"))
+    rows.append(csv_row(
+        f"refresh/train-step-overlap/n={n}", us_by_mode["overlap"],
+        f"hidden_refresh_us={spike:.1f} cadence=4 k=2"))
+    rows.append(csv_row(f"refresh/island-rebuild/n={n}", us_refresh,
+                        "dispatched off the step stream"))
+    if not quiet:
+        for r in rows:
+            print(r, flush=True)
+    return rows
+
+
 def run(ns=(4096, 16384, 65536), d=64, m=64, t_batch=64, quiet=False):
     k = quadratic_kernel(100.0)
     rows = []
@@ -104,6 +165,7 @@ def run(ns=(4096, 16384, 65536), d=64, m=64, t_batch=64, quiet=False):
     if not quiet:
         for r in rows:
             print(r, flush=True)
+    rows.extend(refresh_overlap(quiet=quiet))
     return rows
 
 

@@ -36,11 +36,30 @@ ROW_SCHEMAS = {
                         "final_loss": numbers.Real},
     "grad_bias": {"sampler": str, "m": numbers.Integral,
                   "bias_linf": numbers.Real, "bias_l2": numbers.Real},
+    # grad_bias rows MAY carry "staleness_k" (refresh-island sweep) — typed
+    # below in OPTIONAL_ROW_KEYS; at least one such row must exist.
     "convergence_speed": {"name": str, "curve": list},
     "serving": {"path": str, "n": numbers.Integral,
                 "concurrency": numbers.Integral, "p50_ms": numbers.Real,
                 "p99_ms": numbers.Real, "qps": numbers.Real},
     "roofline": None,  # free-form analysis dict per row
+}
+
+#: keys a row may carry beyond its family schema, with their types
+OPTIONAL_ROW_KEYS = {
+    "grad_bias": {"staleness_k": numbers.Integral},
+}
+
+#: per-family row-NAME presence requirements: the refresh-island PR's
+#: acceptance criteria, enforced on every emitted trajectory file
+REQUIRED_ROW_PREFIXES = {
+    "sampler_cost": ["refresh/train-step-sync", "refresh/train-step-overlap",
+                     "refresh/island-rebuild"],
+}
+REQUIRED_ROW_PREDICATES = {
+    # at least one k-stale refresh-island row (k > 0) must be present
+    "grad_bias": [("staleness row (staleness_k key)",
+                   lambda r: "staleness_k" in r)],
 }
 
 
@@ -82,6 +101,11 @@ def check_file(path: str) -> list[str]:
                 errors.append(f"rows[{i}][{key!r}] is "
                               f"{type(row[key]).__name__}, wanted "
                               f"{typ.__name__}")
+        for key, typ in OPTIONAL_ROW_KEYS.get(name, {}).items():
+            if key in row and not isinstance(row[key], typ):
+                errors.append(f"rows[{i}][{key!r}] is "
+                              f"{type(row[key]).__name__}, wanted "
+                              f"{typ.__name__}")
         if name == "convergence_speed":
             for pt in row.get("curve", []):
                 if (not isinstance(pt, list) or len(pt) != 2
@@ -89,6 +113,14 @@ def check_file(path: str) -> list[str]:
                     errors.append(f"rows[{i}] curve point {pt!r} is not "
                                   "[step, loss]")
                     break
+    for prefix in REQUIRED_ROW_PREFIXES.get(name, []):
+        if not any(str(r.get("name", "")).startswith(prefix)
+                   for r in payload["rows"] if isinstance(r, dict)):
+            errors.append(f"no row named '{prefix}*' — the refresh-overlap "
+                          "section is missing from this trajectory file")
+    for label, pred in REQUIRED_ROW_PREDICATES.get(name, []):
+        if not any(pred(r) for r in payload["rows"] if isinstance(r, dict)):
+            errors.append(f"no {label} present")
     return errors
 
 

@@ -85,7 +85,15 @@ class CheckpointManager:
     # -- write ---------------------------------------------------------------
     def save(self, step: int, state: Any, extra: dict | None = None,
              blocking: bool = False) -> None:
+        # Multi-host: arrays are saved as LOGICAL (global) tensors, so every
+        # process holds identical bytes after the device->host gather —
+        # exactly one process (0) may write them, or concurrent writers
+        # race the .tmp dance on shared storage.  Non-zero processes
+        # still run _flatten: the cross-host all-gather it implies is a
+        # collective every process must join.
         arrays = _flatten(state)  # device->host now (consistent snapshot)
+        if jax.process_index() != 0:
+            return
         treedef = jax.tree_util.tree_structure(state)
         manifest = {
             "step": int(step),

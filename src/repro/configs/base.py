@@ -87,6 +87,13 @@ class ArchConfig:
     sampler_proj_rank: Optional[int] = 64
     sampler_alpha: float = 100.0
     sampler_refresh_every: int = 1
+    # Refresh-island scheduling (DESIGN.md §7): "sync" rebuilds sampler
+    # stats inside the jitted step on the cadence (bit-identical legacy
+    # path); "overlap" dispatches the rebuild as an async island from a
+    # head snapshot and swaps the result in refresh_stale_steps steps
+    # stale, hiding the rebuild behind the step stream.
+    refresh_mode: str = "sync"
+    refresh_stale_steps: int = 1
     abs_softmax: bool = False
     # rff sampler family (sampler="rff"; DESIGN.md §2.7): feature dim D of
     # the positive random-feature map and the exp-kernel temperature tau.
@@ -184,6 +191,19 @@ class ArchConfig:
         if self.sampler_refresh_every <= 0:
             bad("sampler_refresh_every must be >= 1, got "
                 f"{self.sampler_refresh_every}")
+        if self.refresh_mode not in ("sync", "overlap"):
+            bad(f"unknown refresh_mode '{self.refresh_mode}'; "
+                "have ['sync', 'overlap']")
+        if self.refresh_stale_steps < 1:
+            bad("refresh_stale_steps must be >= 1, got "
+                f"{self.refresh_stale_steps}")
+        if (self.refresh_mode == "overlap"
+                and self.refresh_stale_steps >= self.sampler_refresh_every
+                and self.sampler_refresh_every > 1):
+            bad(f"refresh_stale_steps={self.refresh_stale_steps} must be < "
+                f"sampler_refresh_every={self.sampler_refresh_every} in "
+                "overlap mode: a rebuild must land before the next one "
+                "dispatches")
         if samples and tp > 1 and self.m_negatives % tp:
             bad(f"m_negatives={self.m_negatives} must divide by the "
                 f"vocab-parallel degree tp={tp} (stratified sampling "

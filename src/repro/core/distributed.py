@@ -44,12 +44,42 @@ from repro.kernels import ops
 
 Array = jax.Array
 
+# Every collective here takes ``axis_name: AxisName`` — a single mesh axis
+# name or a TUPLE of names (multi-host promotion, DESIGN.md §7).  psum /
+# pmax / pmin / all_gather accept tuples natively in jax; the two places
+# that need composition by hand are the shard count (``axis_size``) and the
+# row-major shard index (``axis_index``), so vocab-parallel heads laid out
+# over e.g. ("host", "model") keep exact offsets and key folding.  The
+# dryrun HLO gate asserts the resulting collective ops/shapes per estimator.
+AxisName = Any  # str | tuple[str, ...]
 
-def local_vocab_offset(n_local: int, axis_name: str) -> Array:
-    return lax.axis_index(axis_name) * n_local
+
+def _axis_names(axis_name: AxisName) -> tuple[str, ...]:
+    return (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
 
 
-def local_labels(w_local: Array, labels: Array, axis_name: str) -> Array:
+def axis_size(axis_name: AxisName) -> int:
+    """Static total shard count across one or several named axes."""
+    return int(lax.psum(1, axis_name))
+
+
+def axis_index(axis_name: AxisName) -> Array:
+    """Row-major composed shard index across one or several named axes.
+
+    Matches the device order of ``lax.all_gather(..., axis_name)`` with the
+    same tuple, so gathered-pool order and vocab offsets stay consistent."""
+    names = _axis_names(axis_name)
+    idx = lax.axis_index(names[0])
+    for a in names[1:]:
+        idx = idx * int(lax.psum(1, a)) + lax.axis_index(a)
+    return idx
+
+
+def local_vocab_offset(n_local: int, axis_name: AxisName) -> Array:
+    return axis_index(axis_name) * n_local
+
+
+def local_labels(w_local: Array, labels: Array, axis_name: AxisName) -> Array:
     """Global label ids -> this shard's local row ids (may be out of range
     on non-owner shards — only ever compared against LOCAL negative ids,
     which are in range, so a non-owner shard can never match).  The one
@@ -58,22 +88,22 @@ def local_labels(w_local: Array, labels: Array, axis_name: str) -> Array:
 
 
 def sharded_negative_sample(sampler: Sampler, state_local: Any, h: Array,
-                            m: int, key: Array, axis_name: str
+                            m: int, key: Array, axis_name: AxisName
                             ) -> tuple[Array, Array]:
     """Stratified sampling: each shard draws m/tp from its local distribution.
 
     Returns LOCAL ids (.., m_local) and the GLOBAL log q~ for them.
     """
-    tp = int(lax.psum(1, axis_name))
+    tp = axis_size(axis_name)
     assert m % tp == 0, f"m={m} must divide by the TP degree {tp}"
     m_local = m // tp
-    key_local = jax.random.fold_in(key, lax.axis_index(axis_name))
+    key_local = jax.random.fold_in(key, axis_index(axis_name))
     ids, logq_local = sampler.sample_batch(state_local, h, m_local, key_local)
     # q~_i = q_local(i) / tp  (global stratified probability)
     return ids, logq_local - jnp.log(jnp.asarray(tp, jnp.float32))
 
 
-def _positive_logit(w_local: Array, h: Array, labels: Array, axis_name: str,
+def _positive_logit(w_local: Array, h: Array, labels: Array, axis_name: AxisName,
                     bias_local: Array | None = None) -> Array:
     """Logit of each example's positive class, summed across shards.
 
@@ -92,7 +122,7 @@ def _positive_logit(w_local: Array, h: Array, labels: Array, axis_name: str,
 
 def sharded_sampled_softmax_loss(
     w_local: Array, h: Array, labels: Array, sampler: Sampler,
-    state_local: Any, m: int, key: Array, *, axis_name: str,
+    state_local: Any, m: int, key: Array, *, axis_name: AxisName,
     abs_mode: bool = False, bias_local: Array | None = None,
     mask_accidental_hits: bool = True, impl: str = "auto") -> Array:
     """Sampled softmax over a vocab-sharded head, negatives sampled in place.
@@ -155,7 +185,7 @@ def sharded_sampled_softmax_loss(
 
 def _corrected_neg_logits(w_local: Array, h32: Array, labels: Array,
                           neg_ids: Array, logq: Array, m: int, *,
-                          axis_name: str, abs_mode: bool,
+                          axis_name: AxisName, abs_mode: bool,
                           bias_local: Array | None,
                           mask_hits: bool) -> Array:
     """Shard-local eq.-2-corrected negative logits (T, m_local).
@@ -188,7 +218,7 @@ def _corrected_neg_logits(w_local: Array, h32: Array, labels: Array,
 
 def sharded_tapas_negatives(sampler: Sampler, state_local: Any,
                             w_local: Array, h: Array, m: int, key: Array, *,
-                            axis_name: str,
+                            axis_name: AxisName,
                             bias_local: Array | None = None
                             ) -> tuple[Array, Array, Array, Array]:
     """The two-pass "sample → all-gather pool → re-score" pattern
@@ -216,13 +246,13 @@ def sharded_tapas_negatives(sampler: Sampler, state_local: Any,
     indices, logq (T, m/tp) composed pool x resample log-probability,
     stop-gradiented).
     """
-    tp = int(lax.psum(1, axis_name))
+    tp = axis_size(axis_name)
     assert m % tp == 0, f"m={m} must divide by the TP degree {tp}"
     pool = sampler.pool
     assert pool % tp == 0, f"pool={pool} must divide by the TP degree {tp}"
     m_local, p_local = m // tp, pool // tp
     k_pool, k_draw = jax.random.split(key)
-    k_pool_local = jax.random.fold_in(k_pool, lax.axis_index(axis_name))
+    k_pool_local = jax.random.fold_in(k_pool, axis_index(axis_name))
     base_rt = state_local["base"]
     if sampler.base.shares_negatives:
         pids, lq1 = sampler.base.sample_batch(base_rt, h, p_local,
@@ -245,7 +275,7 @@ def sharded_tapas_negatives(sampler: Sampler, state_local: Any,
     mult = counts[pool_gids]          # multiplicity via O(P) scatter, not P^2
     o_sg = lax.stop_gradient(o) / sampler.tau
     s = o_sg - (pool_logpi + jnp.log(mult.astype(jnp.float32)))[None, :]
-    k_shard = jax.random.fold_in(k_draw, lax.axis_index(axis_name))
+    k_shard = jax.random.fold_in(k_draw, axis_index(axis_name))
     slots = categorical_rows(k_shard, s, m_local)
     logq = (jnp.take_along_axis(o_sg, slots, axis=1)
             - jax.nn.logsumexp(s, axis=-1)[:, None])
@@ -255,7 +285,7 @@ def sharded_tapas_negatives(sampler: Sampler, state_local: Any,
 def _sharded_tapas_loss(
     est: Estimator, w_local: Array, h: Array, labels: Array,
     sampler: Sampler, state_local: Any, m: int, key: Array, *,
-    axis_name: str, abs_mode: bool, bias_local: Array | None) -> Array:
+    axis_name: AxisName, abs_mode: bool, bias_local: Array | None) -> Array:
     """Estimator loss over tapas negatives (per-example (T,)).
 
     The m/tp per-shard draws come from one GLOBAL q, so the corrected
@@ -292,7 +322,7 @@ def _sharded_tapas_loss(
 def sharded_estimator_loss(
     est: Estimator, w_local: Array, h: Array, labels: Array,
     sampler: Sampler, state_local: Any, m: int, key: Array, *,
-    axis_name: str, abs_mode: bool = False,
+    axis_name: AxisName, abs_mode: bool = False,
     bias_local: Array | None = None, impl: str = "auto") -> Array:
     """Estimator-routed vocab-sharded loss (DESIGN.md §6): the shard-local
     sampling + communication pattern each estimator needs, behind one call.
@@ -350,7 +380,7 @@ def sharded_estimator_loss(
 
 
 def sharded_full_softmax_loss(w_local: Array, h: Array, labels: Array, *,
-                              axis_name: str, abs_mode: bool = False,
+                              axis_name: AxisName, abs_mode: bool = False,
                               bias_local: Array | None = None) -> Array:
     """Reference/eval loss: full softmax over the sharded vocab.
 
@@ -368,7 +398,7 @@ def sharded_full_softmax_loss(w_local: Array, h: Array, labels: Array, *,
     return jnp.log(sumexp) + c - transform_logits(pos, abs_mode)
 
 
-def sharded_logits_argmax(w_local: Array, h: Array, *, axis_name: str,
+def sharded_logits_argmax(w_local: Array, h: Array, *, axis_name: AxisName,
                           bias_local: Array | None = None
                           ) -> tuple[Array, Array]:
     """Greedy decode over a sharded head: global (argmax id, max logit).
@@ -392,7 +422,7 @@ def sharded_logits_argmax(w_local: Array, h: Array, *, axis_name: str,
 
 
 def sharded_logits_topk(w_local: Array, h: Array, k: int, *,
-                        axis_name: str,
+                        axis_name: AxisName,
                         bias_local: Array | None = None
                         ) -> tuple[Array, Array]:
     """Dense top-k decode over a sharded head: global (ids, logits), sorted.
@@ -418,7 +448,7 @@ def sharded_logits_topk(w_local: Array, h: Array, k: int, *,
 
 
 def sharded_partition_diagnostics(state_local: Any, sampler: Sampler,
-                                  h: Array, *, axis_name: str) -> Array:
+                                  h: Array, *, axis_name: AxisName) -> Array:
     """Per-shard share of the global kernel mass (load-balance telemetry).
 
     Uses the root-level Gram statistics: rho_s = sum_b alpha h^T Z_b h + n_s,

@@ -26,6 +26,12 @@ class ShardedBatchIterator:
         self._ctx = ctx
         self._seed = seed
         self._step = start_step
+        # Multi-host: each process generates/loads ONLY its batch slice and
+        # contributes its local devices' shards; the global array is
+        # assembled from per-process data without any cross-host transfer
+        # of example bytes.  Single-process runs (every test, the simulated
+        # host farms) keep the plain device_put path.
+        self._procs = jax.process_count()
 
     def __iter__(self):
         return self
@@ -33,18 +39,35 @@ class ShardedBatchIterator:
     def __next__(self) -> dict:
         key = jax.random.fold_in(jax.random.PRNGKey(self._seed), self._step)
         self._step += 1
-        batch = self._sample_fn(key)
         if self._ctx.mesh is not None:
             dsp = (self._ctx.data_axes if len(self._ctx.data_axes) > 1
                    else self._ctx.data_axes[0])
+            mesh = self._ctx.mesh
+            if self._procs > 1:
+                # Per-host slice: this process's rows of the global batch
+                # (the batch dim is sharded over the data axes; processes
+                # own contiguous row blocks in mesh device order).
+                batch = self._sample_fn(key)  # pure fn of (seed, step)
+
+                def place(x):
+                    spec = P(dsp, *([None] * (x.ndim - 1)))
+                    rows = x.shape[0]
+                    assert rows % self._procs == 0, \
+                        f"global batch {rows} % processes {self._procs} != 0"
+                    per = rows // self._procs
+                    lo = jax.process_index() * per
+                    local = jax.device_get(x)[lo:lo + per]
+                    return jax.make_array_from_process_local_data(
+                        NamedSharding(mesh, spec), local, x.shape)
+
+                return jax.tree_util.tree_map(place, batch)
 
             def place(x):
                 spec = P(dsp, *([None] * (x.ndim - 1)))
-                return jax.device_put(
-                    x, NamedSharding(self._ctx.mesh, spec))
+                return jax.device_put(x, NamedSharding(mesh, spec))
 
-            batch = jax.tree_util.tree_map(place, batch)
-        return batch
+            return jax.tree_util.tree_map(place, self._sample_fn(key))
+        return self._sample_fn(key)
 
     # -- checkpointable state --------------------------------------------
     def state_dict(self) -> dict[str, Any]:

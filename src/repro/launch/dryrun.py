@@ -1,10 +1,4 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
-# ^ MUST precede any jax-importing module: jax locks the device count on
-# first init, and the production meshes below need 512 host placeholders.
-# flake8: noqa: E402
-"""Multi-pod dry-run (deliverable e).
+"""Multi-pod dry-run (deliverable e) + the multi-host collective gate.
 
 For every (architecture x input-shape x mesh) cell this lowers + compiles
 the real jitted step (train_step for train shapes, prefill/decode steps for
@@ -19,12 +13,31 @@ no allocation — then records:
 
 into experiments/dryrun/<arch>__<shape>__<mesh>.json, which §Roofline reads.
 
+The collective-contract GATE (``--gate``) lowers the real train step for
+EVERY estimator in the registry on a simulated 16-host
+("host", "data", "model") mesh (``launch.hostsim`` forces the virtual
+device farm; ``launch.mesh.make_multihost_mesh`` slices it into hosts) and
+asserts the named-collective ops, device-group sizes and operand shapes
+against the documented contract (DESIGN.md §7) via
+``launch.hlo_analysis.check_collective_contract`` — the cross-host
+promotion of ``core/distributed.py`` is CI-checkable without real hosts.
+
+The forced device count is applied lazily via
+``hostsim.ensure_host_platform_devices`` (NOT an import-time XLA_FLAGS
+clobber): jax locks the count at first backend init, so the old
+module-level assignment was silently inert under pytest (backend already
+live → 1-device mesh) and destroyed unrelated XLA_FLAGS.  The helper
+guards the first-init constraint with a pointed error and is idempotent,
+so the gate can run twice in one process.
+
 Usage:
   python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh both
   python -m repro.launch.dryrun --all [--mesh single|multi|both]
+  python -m repro.launch.dryrun --gate [--gate-hosts 16]
 """
 import argparse
 import json
+import os
 import re
 import time
 import traceback
@@ -36,7 +49,8 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, shapes_for
-from repro.launch.mesh import make_production_mesh
+from repro.launch.hostsim import ensure_host_platform_devices
+from repro.launch.mesh import make_multihost_mesh, make_production_mesh
 from repro.models import api
 from repro.optim import make_optimizer
 from repro.serve.engine import (
@@ -69,11 +83,20 @@ def pick_optimizer(cfg, ctx):
     return make_optimizer(name, 1e-4), name, n
 
 
+def _cost_analysis(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict or a 1-elem list of dicts
+    depending on the jax version — normalize to a dict."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def analyze(lowered, compiled, mesh) -> dict:
     from repro.launch.hlo_analysis import analyze_hlo
 
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_analysis(compiled)
     txt = compiled.as_text()
     corrected = analyze_hlo(txt)  # trip-count-aware (scan bodies x trips)
     return {
@@ -177,7 +200,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              out_dir: str) -> dict:
     lowered, compiled, mesh, meta = lower_cell(arch, shape_name, multi_pod)
     print(compiled.memory_analysis())
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_analysis(compiled)
     print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
     rec = {**meta, **analyze(lowered, compiled, mesh)}
     os.makedirs(out_dir, exist_ok=True)
@@ -193,6 +216,139 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
           f"{tf:8.2f} TF/dev  lower {meta['lower_s']}s "
           f"compile {meta['compile_s']}s", flush=True)
     return rec
+
+
+# --------------------------------------------------------------------------
+# 16-host collective-contract gate
+# --------------------------------------------------------------------------
+
+GATE_HOSTS = 16
+GATE_PER_HOST = 2
+GATE_BATCH = 32
+
+
+def _gate_cfg():
+    """Tiny recsys cell: every collective of the full train step (head Fd
+    gather, model-axis loss psums/pmax, host-axis reductions) at a
+    CI-friendly compile time."""
+    return get_config("youtube-dnn").reduced(
+        vocab_size=256, m_negatives=32, sampler_block=32,
+        tower_dims=(64, 32), user_feature_dim=64, history_len=3)
+
+
+def gate_contract(cfg, ctx, est_name: str) -> list[dict]:
+    """The documented collective contract for one estimator on a
+    ("host", "data", "model") mesh (DESIGN.md §7 table).
+
+    shard_map lowers the island's lax collectives manually, so the op
+    kinds, replica-group sizes and (post-SPMD, shard-local) operand shapes
+    below are stable across XLA versions:
+
+      * head Fd all-gather — the (v_l, d/fsdp) head shard's feature dim
+        gathered over the data axes (outermost = the host axis), result
+        (v_l, d) per model shard;
+      * model-axis psums — (T_l,)-shaped add-all-reduces over tp-sized
+        groups (positive logit + estimator partition terms);
+      * model-axis pmax — max-all-reduce over tp-sized groups (global
+        logsumexp shift) for the softmax-family estimators;
+      * host/data-axis psum — the loss-sum reduction across the full
+        data extent (hosts x per-host data), scalar add-all-reduce.
+    """
+    from repro.models.transformer import padded_vocab
+
+    tp = ctx.tp
+    data_ext = 1
+    for a in ctx.data_axes:
+        data_ext *= ctx.mesh.shape[a]
+    v_l = padded_vocab(cfg, tp) // tp
+    d = api.hidden_width(cfg)
+    t_l = GATE_BATCH // data_ext  # recsys: tokens == batch rows
+    softmax_family = est_name in ("sampled-softmax", "full")
+    contract = [
+        {"op": "all-gather", "group_size": ctx.mesh.shape[ctx.data_axes[0]],
+         "dims": [v_l, d], "dtype": "f32"},
+        {"op": "all-reduce", "group_size": tp, "dims": [t_l],
+         "dtype": "f32", "reduce": "add"},
+        {"op": "all-reduce", "group_size": data_ext, "reduce": "add"},
+    ]
+    if softmax_family:
+        contract.append({"op": "all-reduce", "group_size": tp,
+                         "dims": [t_l], "reduce": "max"})
+    return contract
+
+
+def run_gate(hosts: int = GATE_HOSTS, per_host: int = GATE_PER_HOST,
+             out_dir: str | None = None) -> dict:
+    """Lower the train step for EVERY registry estimator on a simulated
+    ``hosts``-host mesh and assert the collective contract.  Returns the
+    per-estimator record (also written to ``out_dir`` when given); raises
+    SystemExit(1) on any violation."""
+    import dataclasses
+
+    from repro.core.estimators import estimator_names
+    from repro.launch.hlo_analysis import (
+        check_collective_contract,
+        collective_ops,
+    )
+
+    ensure_host_platform_devices(hosts * per_host)
+    mesh = make_multihost_mesh(hosts=hosts)
+    base = _gate_cfg()
+    report: dict = {"mesh": dict(mesh.shape), "estimators": {}}
+    violations: list[str] = []
+    for est in estimator_names():
+        cfg = dataclasses.replace(base, name=f"{base.name}-{est}",
+                                  estimator=est)
+        with mesh:
+            ctx = ctx_for_train(mesh, cfg)
+            opt = make_optimizer("adamw", 1e-4)
+            state_sds = abstract_train_state(cfg, ctx, opt, max_len=8)
+            batch_specs = api.train_batch_specs(cfg, GATE_BATCH, 0)
+            dsp = ctx.data_axes if len(ctx.data_axes) > 1 else \
+                ctx.data_axes[0]
+            batch_sds = jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(
+                    s.shape, s.dtype,
+                    sharding=NamedSharding(
+                        mesh, ctx.fit_spec(
+                            s.shape,
+                            P(dsp, *([None] * (len(s.shape) - 1)))))),
+                batch_specs)
+            key_sds = jax.ShapeDtypeStruct(
+                (2,), jnp.uint32, sharding=NamedSharding(mesh, P(None)))
+            step_fn = make_train_step(cfg, ctx, opt)
+            t0 = time.time()
+            compiled = jax.jit(step_fn, donate_argnums=(0,)).lower(
+                state_sds, batch_sds, key_sds).compile()
+        txt = compiled.as_text()
+        errs = check_collective_contract(txt, gate_contract(cfg, ctx, est))
+        colls = collective_ops(txt)
+        report["estimators"][est] = {
+            "compile_s": round(time.time() - t0, 1),
+            "collectives": sorted(
+                {f"{c['op']}@{c['group_size']}"
+                 f"{c['dims']}:{c['reduce'] or c['dtype']}" for c in colls}),
+            "violations": errs,
+        }
+        status = "OK" if not errs else "CONTRACT VIOLATION"
+        print(f"[gate] {est:18s} {status} "
+              f"({len(colls)} collective ops, "
+              f"{report['estimators'][est]['compile_s']}s)", flush=True)
+        for e in errs:
+            print(f"       - {e}", flush=True)
+        violations.extend(f"{est}: {e}" for e in errs)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, "collective_gate.json"), "w") as f:
+            json.dump(report, f, indent=1)
+    hshape = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+    if violations:
+        print(f"[gate] FAILED on {hshape}: {len(violations)} violation(s)")
+        raise SystemExit(1)
+    print(f"[gate] PASSED: collective contract holds for "
+          f"{list(report['estimators'])} on the {hshape} "
+          f"(host, data, model) mesh")
+    return report
 
 
 def cells(mesh_sel: str):
@@ -213,7 +369,22 @@ def main() -> None:
                     choices=["single", "multi", "both"])
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", type=str, default=OUT_DIR)
+    ap.add_argument("--gate", action="store_true",
+                    help="run the simulated multi-host collective-contract "
+                         "gate instead of dry-run cells")
+    ap.add_argument("--gate-hosts", type=int, default=GATE_HOSTS)
+    ap.add_argument("--gate-per-host", type=int, default=GATE_PER_HOST)
     args = ap.parse_args()
+
+    if args.gate:
+        run_gate(hosts=args.gate_hosts, per_host=args.gate_per_host,
+                 out_dir=args.out)
+        return
+
+    # The production meshes below need 512 host placeholders; apply the
+    # forced device count up front (fails loudly if jax already
+    # initialized with a different count — see launch/hostsim.py).
+    ensure_host_platform_devices(512)
 
     todo = []
     if args.all:

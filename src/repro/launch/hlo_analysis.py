@@ -249,3 +249,102 @@ def analyze_hlo(text: str, entry: str | None = None) -> dict:
 
     fl, by, coll = walk(entry, True)
     return {"flops": fl, "bytes": by, "collectives": coll}
+
+
+# --------------------------------------------------------------------------
+# Collective-contract gate (multi-host promotion, DESIGN.md §7)
+# --------------------------------------------------------------------------
+
+
+def collective_ops(text: str) -> list[dict]:
+    """Flat per-instruction collective inventory across ALL computations.
+
+    Each record: ``{"op", "group_size", "dtype", "dims", "bytes"}`` —
+    ``group_size`` from replica_groups (iota or explicit list form),
+    ``dtype``/``dims`` from the (first leaf of the) result shape, ``bytes``
+    the full result byte count.  Structural counts only (no trip-count
+    multiplication): the contract gate asserts which collectives EXIST and
+    over which device groups/shapes, not their runtime cost."""
+    comps = _parse_computations(text)
+    # Classify reduction computations (all-reduce to_apply bodies) so a
+    # pmax (max-all-reduce) is distinguishable from a psum: XLA's combiner
+    # can merge same-kind all-reduces but never an add with a max, so the
+    # per-kind presence assertions survive optimization.
+    red_kind: dict[str, str] = {}
+    for name, lines in comps.items():
+        ops = {m.group(3) for line in lines
+               for m in [_DEF_RE.match(line)] if m}
+        for kind, opname in (("max", "maximum"), ("min", "minimum"),
+                             ("add", "add")):
+            if opname in ops:
+                red_kind[name] = kind
+                break
+    out: list[dict] = []
+    for lines in comps.values():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            shape_str, op = m.group(2), m.group(3)
+            for cop in _COLLECTIVES:
+                if op == cop or op == cop + "-start":
+                    sm = _SHAPE_RE.search(shape_str)
+                    ta = _TO_APPLY_RE.search(line)
+                    out.append({
+                        "op": cop,
+                        "group_size": _group_size(line),
+                        "dtype": sm.group(1) if sm else "",
+                        "dims": _dims_of(shape_str),
+                        "bytes": _bytes_of(shape_str),
+                        "reduce": red_kind.get(
+                            ta.group(1).lstrip("%"), "") if ta else "",
+                    })
+    return out
+
+
+def check_collective_contract(text: str, contract: list[dict]) -> list[str]:
+    """Assert named-collective presence/shape against compiled HLO.
+
+    ``contract`` rows: ``{"op": str, "group_size": int | None,
+    "dims": list | None, "dtype": str | None, "min_count": int = 1}`` —
+    ``None``/omitted fields match anything.  Returns human-readable
+    violations ([] = contract holds), each listing the collectives that ARE
+    present so a failed CI gate names the drift instead of a bare count.
+
+    shard_map islands lower their lax collectives manually (outside
+    GSPMD's combiner reach), so explicit psum/pmax/all_gather patterns in
+    ``core/distributed.py`` are stable assertion targets across XLA
+    versions; GSPMD-inserted gradient reductions are not — assert those
+    with ``group_size=None`` presence checks only."""
+    found = collective_ops(text)
+    errors = []
+    for want in contract:
+        n = 0
+        for c in found:
+            if c["op"] != want["op"]:
+                continue
+            if want.get("group_size") is not None \
+                    and c["group_size"] != want["group_size"]:
+                continue
+            if want.get("dims") is not None \
+                    and list(c["dims"]) != list(want["dims"]):
+                continue
+            if want.get("dtype") is not None \
+                    and c["dtype"] != want["dtype"]:
+                continue
+            if want.get("reduce") is not None and want.get("reduce") != "" \
+                    and c.get("reduce") != want["reduce"]:
+                continue
+            n += 1
+        need = want.get("min_count", 1)
+        if n < need:
+            present = sorted({(c["op"], c["group_size"], tuple(c["dims"]))
+                              for c in found})
+            errors.append(
+                f"wanted >= {need} x {want['op']}"
+                f"(group_size={want.get('group_size')}, "
+                f"dims={want.get('dims')}, dtype={want.get('dtype')}), "
+                f"found {n}; present collectives: "
+                + (", ".join(f"{o}@{g}{list(d)}" for o, g, d in present)
+                   or "none"))
+    return errors

@@ -203,7 +203,9 @@ def mesh_ctx(mesh: Mesh, mode: str = "tp_fsdp",
              seq_residuals: bool = False) -> ShardCtx:
     assert mode in MODES, mode
     axes = mesh.axis_names
-    data_axes = tuple(a for a in axes if a in ("pod", "data"))
+    # "host" (multi-host meshes from launch.mesh.make_multihost_mesh) and
+    # "pod" are both outer data axes: batch-sharded, psum-reduced.
+    data_axes = tuple(a for a in axes if a in ("host", "pod", "data"))
     return ShardCtx(mesh=mesh, data_axes=data_axes, model_axis="model",
                     mode=mode, seq_residuals=seq_residuals)
 

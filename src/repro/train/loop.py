@@ -36,14 +36,21 @@ import time
 from typing import Any, Callable
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import ArchConfig
 from repro.data.pipeline import ShardedBatchIterator
+from repro.models import api
 from repro.optim.transform import GradientTransform
 from repro.sharding.rules import ShardCtx
-from repro.train.step import TrainState, init_train_state, make_train_step
+from repro.train.step import (
+    TrainState,
+    init_train_state,
+    make_refresh_fn,
+    make_train_step,
+)
 
 
 @dataclasses.dataclass
@@ -52,6 +59,74 @@ class LoopResult:
     losses: list[float]
     straggler_steps: list[int]
     restored_from: int | None
+    # refresh-island telemetry (refresh_mode="overlap"; zeros under "sync")
+    refresh_swaps: int = 0
+    refresh_staleness: list[int] = dataclasses.field(default_factory=list)
+
+
+class RefreshIsland:
+    """Double-buffered async sampler-stat refresh (``refresh_mode="overlap"``).
+
+    Lifecycle per cadence window (DESIGN.md §7): on a cadence step the
+    island SNAPSHOTS the head table (a jitted copy — fresh buffers, so
+    step-donated ``TrainState`` arrays are never inputs of an in-flight
+    rebuild), dispatches the jitted ``make_refresh_fn`` rebuild WITHOUT
+    blocking the step stream, and SWAPS the result into the carried
+    ``TrainState.sampler_state`` exactly ``cfg.refresh_stale_steps`` steps
+    after dispatch (blocking there if the rebuild hasn't finished — a
+    fixed-k swap keeps the q sequence deterministic run-to-run, unlike
+    is_ready() polling).  The statistics a step samples from are therefore
+    built from a head ``k..k+cadence-1`` optimizer updates old; the eq. 2
+    correction always uses the statistics actually sampled from, so
+    staleness costs bias-of-q only (BENCH_grad_bias.json staleness rows),
+    never estimator correctness.
+    """
+
+    def __init__(self, cfg: ArchConfig, ctx: ShardCtx):
+        self.cadence = max(cfg.sampler_refresh_every, 1)
+        self.k = max(cfg.refresh_stale_steps, 1)
+        refresh = make_refresh_fn(cfg, ctx)
+        self.enabled = refresh.carries_stats
+        self._snapshot = jax.jit(lambda p: jnp.copy(api.head_table(p, cfg)))
+        self._refresh = jax.jit(refresh)
+        self._inflight: tuple[int, Any] | None = None  # (dispatch step, fut)
+        self._active_from = 0  # step whose head built the active stats
+        self.swaps = 0
+        self.block_s = 0.0  # total wall time spent blocked on swaps
+
+    def prime(self, state: TrainState) -> TrainState:
+        """Blocking initial rebuild: mesh init carries zero stats (the sync
+        path fills them at step 0 in-step; overlap must fill them here)."""
+        if not self.enabled:
+            return state
+        sstate = self._refresh(self._snapshot(state.params),
+                               state.sampler_state)
+        jax.block_until_ready(sstate)
+        self._active_from = int(jax.device_get(state.step))
+        return dataclasses.replace(state, sampler_state=sstate)
+
+    def before_step(self, i: int, state: TrainState
+                    ) -> tuple[TrainState, dict[str, float]]:
+        """Swap a due rebuild in, dispatch the next one; never blocks unless
+        the fixed-k swap deadline arrives before the rebuild finished."""
+        if not self.enabled:
+            return state, {}
+        block_ms = 0.0
+        if self._inflight is not None and i - self._inflight[0] >= self.k:
+            sent, fut = self._inflight
+            t0 = time.perf_counter()
+            jax.block_until_ready(fut)
+            block_ms = (time.perf_counter() - t0) * 1e3
+            self.block_s += block_ms / 1e3
+            state = dataclasses.replace(state, sampler_state=fut)
+            self._active_from = sent
+            self._inflight = None
+            self.swaps += 1
+        if i % self.cadence == 0 and self._inflight is None:
+            self._inflight = (i, self._refresh(self._snapshot(state.params),
+                                               state.sampler_state))
+        return state, {"refresh_staleness_steps": float(i - self._active_from),
+                       "refresh_block_ms": block_ms}
 
 
 def fit(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
@@ -64,7 +139,14 @@ def fit(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
         log_every: int = 10,
         eval_fn: Callable[[TrainState], float] | None = None,
         max_len: int = 4096) -> LoopResult:
-    step_fn = jax.jit(make_train_step(cfg, ctx, opt))
+    # Donation audit (DESIGN.md §7): the TrainState argument is donated so
+    # params/opt/sampler buffers are reused in place (inert on CPU — a
+    # warning, not an error).  Safe against the overlap island: its inputs
+    # are a jitted head COPY and its outputs share no buffers with the
+    # donated state (make_refresh_fn's const copy).
+    step_fn = jax.jit(make_train_step(cfg, ctx, opt), donate_argnums=(0,))
+    island = RefreshIsland(cfg, ctx) if cfg.refresh_mode == "overlap" \
+        else None
 
     mgr = CheckpointManager(checkpoint_dir, keep=keep) \
         if checkpoint_dir else None
@@ -76,6 +158,8 @@ def fit(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
         restored_from = int(extra.get("step", mgr.latest_step()))
         if "data_state" in extra:
             data.load_state(extra["data_state"])
+    if island is not None:
+        state = island.prime(state)
 
     losses: list[float] = []
     stragglers: list[int] = []
@@ -117,6 +201,8 @@ def fit(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
                   f"({dt*1e3:.0f} ms){extra_s}", flush=True)
 
     start = int(jax.device_get(state.step))
+    cadence = max(cfg.sampler_refresh_every, 1)
+    refresh_staleness: list[int] = []
     for i in range(start, steps):
         if fail_at_step is not None and i == fail_at_step:
             raise RuntimeError(f"injected failure at step {i}")
@@ -130,9 +216,22 @@ def fit(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
         t0 = time.perf_counter()
         if slow_step_injection and i in slow_step_injection:
             time.sleep(slow_step_injection[i])  # test hook: fake straggler
+        # Sampler-staleness metrics share the serving vocabulary
+        # (index_staleness_steps): age, in optimizer steps, of the head the
+        # active sampling statistics were built from.  Sync mode rebuilds
+        # in-step on the cadence; overlap swaps k-stale island results (any
+        # residual blocking charges THIS step's timed region — that is the
+        # un-hidden refresh cost the sampler_cost benchmark tracks).
+        if island is not None:
+            state, rmetrics = island.before_step(i, state)
+        else:
+            rmetrics = {"refresh_staleness_steps": float(i % cadence),
+                        "refresh_block_ms": 0.0}
+        refresh_staleness.append(int(rmetrics["refresh_staleness_steps"]))
         state, metrics = step_fn(state, batch,
                                  jax.random.fold_in(
                                      jax.random.PRNGKey(seed + 1), i))
+        metrics = {**metrics, **rmetrics}
         pending = (i, metrics, t0, state)
         if mgr is not None and (i + 1) % checkpoint_every == 0:
             mgr.save(i + 1, state,
@@ -144,4 +243,6 @@ def fit(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
                  extra={"step": steps, "data_state": data.state_dict()},
                  blocking=True)
     return LoopResult(state=state, losses=losses, straggler_steps=stragglers,
-                      restored_from=restored_from)
+                      restored_from=restored_from,
+                      refresh_swaps=island.swaps if island else 0,
+                      refresh_staleness=refresh_staleness)

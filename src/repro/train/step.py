@@ -81,6 +81,64 @@ def _merge_refresh(new: dict, keep: dict, refresh: Array) -> dict:
         lambda a_, b_: jnp.where(refresh, a_, b_), new, keep)
 
 
+def make_refresh_fn(cfg: ArchConfig, ctx: ShardCtx
+                    ) -> Callable[[Array, SamplerState], SamplerState]:
+    """Unconditional sampler-stat rebuild from a head-table snapshot.
+
+    The refresh-island half of ``refresh_mode="overlap"`` (DESIGN.md §7):
+    the loop jits this once, dispatches it against a SNAPSHOT of the head
+    (fresh buffers — donation of TrainState can never invalidate its
+    inputs) without blocking the step stream, and swaps the result into
+    the carried ``TrainState.sampler_state`` a fixed
+    ``cfg.refresh_stale_steps`` steps later.  Mathematically identical to
+    the in-step refresh at the same head; the only difference is WHICH
+    head it saw (k optimizer updates stale — bias-of-q only, never
+    estimator correctness, quantified in BENCH_grad_bias.json staleness
+    rows).  A no-op (state passes through) for stateless samplers or
+    dense estimators."""
+    cfg.validate(tp=ctx.tp)
+    sampler = sampler_from_config(cfg)
+    estimator = estimators.make_estimator(cfg.estimator)
+    mesh = ctx.mesh
+    tp = ctx.tp
+    head_fsdp = ctx.data_spec() if mesh is not None else None
+    v_l = padded_vocab(cfg, tp) // tp
+    carries_stats = sampler.carries_state and estimator.needs_sampling
+    mdl = ctx.model_axis
+    specs = (sampler.state_specs(cfg, tp, axis=mdl) if carries_stats
+             else empty_state())
+
+    def island(head, const):
+        my = lax.axis_index(mdl)
+        head_full = head  # gather the Fd-sharded feature dim
+        for a in ctx.data_axes[::-1]:
+            head_full = lax.all_gather(head_full, a, axis=1, tiled=True)
+        n_valid = jnp.clip(cfg.vocab_size - my * v_l, 0, v_l)
+        return sampler.build_stats(head_full, n_valid, const)
+
+    def refresh_fn(head: Array, sampler_state: SamplerState) -> SamplerState:
+        if not carries_stats:
+            return sampler_state
+        head = lax.stop_gradient(head)
+        if mesh is None:
+            n_valid = jnp.asarray(cfg.vocab_size, jnp.int32)
+            stats = sampler.build_stats(head, n_valid, sampler_state.const)
+        else:
+            stats = shard_map(
+                island, mesh=mesh, check_vma=False,
+                in_specs=(P(mdl, head_fsdp), specs.const),
+                out_specs=specs.stats,
+            )(head, sampler_state.const)
+        # Copy const so jitted callers never input→output-forward a buffer:
+        # the swapped-in state must share NOTHING with the (donatable)
+        # TrainState the loop passed at dispatch time.
+        const = jax.tree_util.tree_map(jnp.copy, sampler_state.const)
+        return SamplerState(stats=stats, const=const)
+
+    refresh_fn.carries_stats = carries_stats
+    return refresh_fn
+
+
 def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
                     aux_coef: float = 0.01
                     ) -> Callable[[TrainState, dict, Array],
@@ -214,11 +272,20 @@ def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
 
         return jax.tree_util.tree_map(one, batch)
 
+    overlap = cfg.refresh_mode == "overlap"
+
     def train_step(state: TrainState, batch: dict, key: Array
                    ) -> tuple[TrainState, dict]:
-        refresh = (state.step % max(cfg.sampler_refresh_every, 1)) == 0
-        head = api.head_table(state.params, cfg)
-        sstate = refresh_state(head, state.sampler_state, refresh)
+        if overlap:
+            # Refresh runs OUTSIDE the step (train/loop.py RefreshIsland
+            # dispatches make_refresh_fn from a head snapshot and swaps
+            # the result into the carried state k steps stale); the step
+            # samples from whatever statistics it was handed.
+            sstate = state.sampler_state
+        else:
+            refresh = (state.step % max(cfg.sampler_refresh_every, 1)) == 0
+            head = api.head_table(state.params, cfg)
+            sstate = refresh_state(head, state.sampler_state, refresh)
         mu = max(cfg.microbatches, 1)
         if mu == 1:
             (total, (loss, aux)), grads = grad_fn(

@@ -1,0 +1,38 @@
+"""The 16-host HLO collective-contract gate, run the way CI runs it.
+
+Deliberately does NOT set XLA_FLAGS at the top: the gate itself must force
+the host-platform device count lazily (launch/hostsim.py) before first
+backend init — and running it TWICE in one process must work (the old
+module-level os.environ clobber in dryrun.py broke exactly this)."""
+import json
+import os
+
+from repro.launch.dryrun import run_gate
+from repro.launch.hostsim import ensure_host_platform_devices
+
+out_dir = "/tmp/dryrun_gate_out"
+os.makedirs(out_dir, exist_ok=True)
+
+results = run_gate(hosts=16, per_host=2, out_dir=out_dir)
+with open(os.path.join(out_dir, "collective_gate.json")) as f:
+    report = json.load(f)
+assert len(report["estimators"]) >= 4, report
+assert all(not r["violations"] for r in report["estimators"].values()), report
+assert results["mesh"] == {"host": 16, "data": 1, "model": 2}, results["mesh"]
+
+# second run in the SAME process: the env guard must be idempotent
+run_gate(hosts=16, per_host=2)
+print("gate ran twice in one process")
+
+# a conflicting device count after init must raise the pointed error, not
+# silently compile for the wrong topology
+try:
+    ensure_host_platform_devices(7)
+except RuntimeError as e:
+    assert "host" in str(e).lower() or "device" in str(e).lower(), e
+    print("conflicting device count raised:", str(e).splitlines()[0][:80])
+else:
+    raise AssertionError("ensure_host_platform_devices(7) did not raise "
+                         "after the backend initialized with 32 devices")
+
+print("DRYRUN GATE CHECKS PASSED")

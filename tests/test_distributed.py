@@ -103,3 +103,30 @@ def test_pure_fsdp_mode():
     batch-spill onto the sequence dim for small batches."""
     out = _run("check_pure_fsdp.py")
     assert "PURE_FSDP CHECKS PASSED" in out
+
+
+@pytest.mark.slow
+def test_multihost_mesh_train():
+    """Simulated 4-host ("host", "data", "model") mesh: tuple-axis
+    collective helpers compose row-major, sync and overlapped-refresh train
+    steps run over the host axis (DESIGN.md §7)."""
+    out = _run("check_multihost_mesh.py")
+    assert "MULTIHOST MESH CHECKS PASSED" in out
+
+
+@pytest.mark.slow
+def test_elastic_restore_across_mesh_shapes():
+    """Checkpoint written on a 2x4 mesh restores bit-identically onto a 1x8
+    mesh (explicit NamedShardings) and onto mesh=None, and training
+    continues on each."""
+    out = _run("check_elastic_restore.py")
+    assert "ELASTIC RESTORE CHECKS PASSED" in out
+
+
+@pytest.mark.slow
+def test_dryrun_collective_gate():
+    """The CI gate end-to-end: 16-host HLO collective contract for every
+    estimator, twice in one process (lazy idempotent device forcing), and
+    the pointed error on a conflicting device count."""
+    out = _run("check_dryrun_gate.py", timeout=580)
+    assert "DRYRUN GATE CHECKS PASSED" in out

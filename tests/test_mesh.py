@@ -1,0 +1,66 @@
+"""Elastic mesh-shape arithmetic + multi-host mesh construction.
+
+``mesh_shape_for`` is pure (dp, tp) arithmetic, so the elastic-restart
+shapes (whatever device count survives a failure) are testable on 1 CPU
+device; actual Mesh construction for >1 device lives in the dist scripts.
+"""
+import jax
+import pytest
+
+from repro.launch.mesh import (
+    make_mesh_for,
+    make_multihost_mesh,
+    mesh_shape_for,
+)
+from repro.sharding.rules import mesh_ctx
+
+
+@pytest.mark.parametrize("devices,expect", [
+    (1, (1, 1)),
+    (2, (1, 2)),
+    (4, (1, 4)),
+    (6, (3, 2)),    # largest dividing power-of-two tp is 2
+    (8, (1, 8)),
+    (12, (3, 4)),   # 8 does not divide 12 -> tp=4
+])
+def test_elastic_restart_shapes(devices, expect):
+    assert mesh_shape_for(devices) == expect
+    dp, tp = expect
+    assert dp * tp == devices
+
+
+@pytest.mark.parametrize("devices,tp", [(6, 4), (8, 3), (12, 5), (1, 2)])
+def test_explicit_tp_not_dividing_raises_pointed_valueerror(devices, tp):
+    with pytest.raises(ValueError) as e:
+        mesh_shape_for(devices, tp=tp)
+    # the error must name BOTH numbers so an elastic-restart log is
+    # actionable without a debugger
+    assert f"tp={tp}" in str(e.value)
+    assert f"devices={devices}" in str(e.value)
+
+
+def test_explicit_tp_dividing_ok():
+    assert mesh_shape_for(12, tp=6) == (2, 6)
+    assert mesh_shape_for(8, tp=2) == (4, 2)
+
+
+def test_make_mesh_for_single_device():
+    mesh = make_mesh_for(1)
+    assert dict(mesh.shape) == {"data": 1, "model": 1}
+
+
+def test_multihost_mesh_single_process():
+    # hosts=1 on 1 device: degenerate but valid ("host", "data", "model")
+    mesh = make_multihost_mesh(hosts=1)
+    assert mesh.axis_names == ("host", "data", "model")
+    assert mesh.shape["host"] == 1
+    # the host axis is a DATA axis for the sharding rules
+    ctx = mesh_ctx(mesh)
+    assert ctx.data_axes == ("host", "data")
+    assert ctx.model_axis == "model"
+
+
+def test_multihost_mesh_indivisible_hosts_raises():
+    n = jax.device_count()
+    with pytest.raises(ValueError, match="hosts"):
+        make_multihost_mesh(hosts=n + 1)

@@ -1,0 +1,145 @@
+"""Overlapped sampler-stat refresh island (refresh_mode="overlap").
+
+Sync-mode bit-identity is the golden-parity suite's job; this file covers
+the overlap path: deterministic fixed-k swaps, the staleness telemetry
+contract, config validation, and the donation-safety guarantee of
+``make_refresh_fn`` (outputs share no buffers with the carried state).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import batch_iterator_for
+from repro.models import api
+from repro.optim import make_optimizer
+from repro.sharding.rules import local_ctx
+from repro.train.loop import fit
+from repro.train.step import init_train_state, make_refresh_fn
+
+CTX = local_ctx()
+
+
+def _cfg(**kw):
+    base = get_config("youtube-dnn").reduced(
+        vocab_size=256, m_negatives=32, sampler_block=32,
+        tower_dims=(64, 32), user_feature_dim=64, history_len=3)
+    return dataclasses.replace(base, **kw)
+
+
+def _run(cfg, steps=24, seed=0):
+    opt = make_optimizer("adamw", 1e-2, weight_decay=0.0)
+    data = batch_iterator_for(cfg, CTX, global_batch=32, seq_len=0, seed=seed)
+    return fit(cfg, CTX, opt, data, steps=steps, log_every=0, max_len=8)
+
+
+# -- config validation --------------------------------------------------------
+
+def test_unknown_refresh_mode_rejected():
+    with pytest.raises(ValueError, match="refresh_mode"):
+        _cfg(refresh_mode="async").validate()
+
+
+def test_nonpositive_stale_steps_rejected():
+    with pytest.raises(ValueError, match="refresh_stale_steps"):
+        _cfg(refresh_stale_steps=0).validate()
+
+
+def test_stale_steps_must_fit_inside_cadence():
+    # k >= cadence would mean a rebuild is still in flight when the next
+    # cadence step wants to dispatch
+    with pytest.raises(ValueError, match="must be <"):
+        _cfg(refresh_mode="overlap", sampler_refresh_every=4,
+             refresh_stale_steps=4).validate()
+    # ...but cadence=1 (refresh every step) allows any k
+    _cfg(refresh_mode="overlap", sampler_refresh_every=1,
+         refresh_stale_steps=3).validate()
+
+
+# -- refresh fn ---------------------------------------------------------------
+
+def test_refresh_fn_matches_in_step_rebuild():
+    """make_refresh_fn at head H == the sync path's build_stats at H."""
+    from repro.core.samplers import sampler_from_config
+    cfg = _cfg()
+    opt = make_optimizer("adamw", 1e-2)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, CTX, opt, max_len=8)
+    refresh = make_refresh_fn(cfg, CTX)
+    assert refresh.carries_stats
+    out = refresh(api.head_table(state.params, cfg), state.sampler_state)
+    sampler = sampler_from_config(cfg)
+    direct = sampler.build_stats(api.head_table(state.params, cfg),
+                                 jnp.asarray(cfg.vocab_size, jnp.int32),
+                                 state.sampler_state.const)
+    for a, b in zip(jax.tree_util.tree_leaves(out.stats),
+                    jax.tree_util.tree_leaves(direct)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_refresh_fn_output_shares_no_buffers_with_input():
+    """Donation safety: the swapped-in state must be fresh buffers — if a
+    jitted refresh input->output-forwarded a const leaf, donating the
+    TrainState later would invalidate the island's result."""
+    cfg = _cfg()
+    opt = make_optimizer("adamw", 1e-2)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, CTX, opt, max_len=8)
+    refresh = jax.jit(make_refresh_fn(cfg, CTX))
+    out = refresh(api.head_table(state.params, cfg), state.sampler_state)
+    def ptr(x):
+        try:
+            return x.unsafe_buffer_pointer()
+        except Exception:  # noqa: BLE001 — sharded arrays / API drift
+            return None
+
+    in_leaves = jax.tree_util.tree_leaves(state.sampler_state)
+    in_ptrs = {ptr(s) for s in in_leaves} - {None}
+    for leaf in jax.tree_util.tree_leaves(out):
+        for src in in_leaves:
+            assert leaf is not src
+        p = ptr(leaf)
+        if p is not None and in_ptrs:
+            assert p not in in_ptrs
+
+
+# -- overlap loop behaviour ---------------------------------------------------
+
+def test_overlap_staleness_pattern_and_swaps():
+    """cadence=4, k=2: dispatch at 0,4,8,... swap at 2,6,10,...  Staleness
+    (age of the head behind the active stats) must follow the fixed-k
+    sawtooth: 0,1,2,3,4,5,2,3,4,5,2,3,...  (prime() at step 0 makes the
+    first window start at 0)."""
+    cfg = _cfg(refresh_mode="overlap", sampler_refresh_every=4,
+               refresh_stale_steps=2)
+    res = _run(cfg, steps=14)
+    assert res.refresh_staleness == [0, 1, 2, 3, 4, 5, 2, 3, 4, 5, 2, 3, 4, 5]
+    assert res.refresh_swaps == 3  # swaps landed at steps 2, 6, 10
+    assert np.all(np.isfinite(res.losses))
+
+
+def test_overlap_is_deterministic_run_to_run():
+    """Fixed-k swaps (not is_ready polling) keep the q sequence — hence the
+    loss sequence — bitwise identical across runs."""
+    cfg = _cfg(refresh_mode="overlap", sampler_refresh_every=4,
+               refresh_stale_steps=2)
+    a = _run(cfg, steps=20, seed=5)
+    b = _run(cfg, steps=20, seed=5)
+    assert a.losses == b.losses  # bitwise
+    assert a.refresh_swaps == b.refresh_swaps
+    assert a.refresh_staleness == b.refresh_staleness
+
+
+def test_overlap_still_learns():
+    cfg = _cfg(refresh_mode="overlap", sampler_refresh_every=2,
+               refresh_stale_steps=1)
+    res = _run(cfg, steps=60)
+    assert np.mean(res.losses[-10:]) < np.mean(res.losses[:10]) - 0.05
+
+
+def test_sync_mode_reports_cadence_staleness():
+    cfg = _cfg(refresh_mode="sync", sampler_refresh_every=3)
+    res = _run(cfg, steps=9)
+    assert res.refresh_staleness == [0, 1, 2, 0, 1, 2, 0, 1, 2]
+    assert res.refresh_swaps == 0
