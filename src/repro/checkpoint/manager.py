@@ -33,13 +33,26 @@ their single-host form:
                      never overlap, or writer B's keep-K GC can delete
                      writer A's in-flight step;
   * keep-K GC      — bounded disk usage;
-  * elastic restore— arrays are stored as LOGICAL tensors; restore places
-                     them with WHATEVER mesh/shardings the restarted job
-                     built (device count may differ; see launch/train.py).
-                     A production deployment would write per-host shard
-                     files + a resharding map instead of logical tensors;
-                     the interface (save/restore against abstract state) is
-                     the same.
+  * elastic restore— single-process checkpoints store LOGICAL tensors;
+                     restore places them with WHATEVER mesh/shardings the
+                     restarted job built (device count may differ; see
+                     launch/train.py);
+  * multi-process  — ``jax.process_count() > 1`` switches save to
+                     PER-PROCESS SHARD FILES (``format: "sharded"``): each
+                     process writes only the shards its own devices hold
+                     (``Array.addressable_shards`` — a host-local copy, NO
+                     cross-host collective; ``jax.device_get`` on a
+                     globally-sharded array would need a multi-process XLA
+                     computation, which e.g. CPU farms cannot run), and
+                     process 0 writes the manifest and performs the atomic
+                     rename.  The phases are ordered by coordination-service
+                     barriers (``jax.distributed``'s KV service — available
+                     wherever multi-process jax is initialized at all).
+                     Restore reassembles logical tensors from all shard
+                     files with a coverage check, then re-places them under
+                     the restarted job's shardings.  Validated by a REAL
+                     2-process ``jax.distributed`` test
+                     (tests/dist_scripts/check_multiprocess_ckpt.py).
 """
 from __future__ import annotations
 
@@ -54,11 +67,90 @@ import numpy as np
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    """Single-process device->host flatten (logical tensors).  Only valid
+    when every leaf is fully addressable — the multi-process save path uses
+    ``_local_shards`` instead."""
     out = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
         out[key] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+def _leaf_key(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _barrier(name: str, timeout_ms: int = 600_000) -> None:
+    """Cross-process barrier via the jax.distributed coordination service.
+    A host-side RPC handshake, NOT an XLA collective — it works on device
+    farms whose backend cannot run multi-process computations (CPU).  No-op
+    when no coordination service is wired (single process)."""
+    from jax._src import distributed as _dist
+    client = getattr(_dist.global_state, "client", None)
+    if client is not None:
+        client.wait_at_barrier(name, timeout_in_ms=timeout_ms)
+
+
+def _local_shards(tree: Any) -> tuple[dict[str, np.ndarray], dict[str, list]]:
+    """THIS process's addressable shards of a (possibly multi-host) pytree.
+
+    Returns ``(arrays, index)``: ``arrays`` maps ``"<leaf>@<n>"`` to the
+    n-th distinct local shard's data, ``index`` maps the same key to the
+    ``[[lo, hi], ...]`` block of the logical tensor it covers.  Replicas on
+    multiple local devices are deduplicated.  Fully-addressable leaves
+    (replicated host-side values) are written by process 0 only — every
+    process holds identical bytes for them by construction."""
+    arrays: dict[str, np.ndarray] = {}
+    index: dict[str, list] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _leaf_key(path)
+        if isinstance(leaf, jax.Array) and not leaf.is_fully_addressable:
+            seen: set = set()
+            for shard in leaf.addressable_shards:
+                bounds = tuple(s.indices(dim)[:2]
+                               for s, dim in zip(shard.index, leaf.shape))
+                if bounds in seen:
+                    continue
+                seen.add(bounds)
+                skey = f"{key}@{len(seen) - 1}"
+                arrays[skey] = np.asarray(shard.data)
+                index[skey] = [list(b) for b in bounds]
+        elif jax.process_index() == 0:
+            arr = np.asarray(jax.device_get(leaf))
+            arrays[f"{key}@0"] = arr
+            index[f"{key}@0"] = [[0, d] for d in arr.shape]
+    return arrays, index
+
+
+def _assemble_sharded(base: str, manifest: dict) -> dict[str, np.ndarray]:
+    """Reassemble logical tensors from every process's shard files.  A
+    coverage mask catches missing/partial shard files with a pointed error
+    instead of silently restoring zeros."""
+    leaves = manifest["leaves"]
+    out = {k: np.zeros(tuple(v["shape"]), np.dtype(v["dtype"]))
+           for k, v in leaves.items()}
+    filled = {k: np.zeros(tuple(v["shape"]), bool) for k, v in leaves.items()}
+    for fn in sorted(os.listdir(base)):
+        if not (fn.startswith("shards_") and fn.endswith(".json")):
+            continue
+        with open(os.path.join(base, fn)) as f:
+            index = json.load(f)
+        npz = np.load(os.path.join(base, fn[:-len(".json")] + ".npz"))
+        for skey, bounds in index.items():
+            key = skey.rsplit("@", 1)[0]
+            sl = tuple(slice(lo, hi) for lo, hi in bounds)
+            out[key][sl] = npz[skey]
+            filled[key][sl] = True
+    missing = sorted(k for k, m in filled.items() if not m.all())
+    if missing:
+        raise ValueError(
+            f"checkpoint at {base} has incomplete shard coverage for "
+            f"{missing}: expected shard files from "
+            f"{manifest.get('processes', '?')} processes, found "
+            f"{sorted(f for f in os.listdir(base) if f.startswith('shards_'))}")
     return out
 
 
@@ -85,15 +177,15 @@ class CheckpointManager:
     # -- write ---------------------------------------------------------------
     def save(self, step: int, state: Any, extra: dict | None = None,
              blocking: bool = False) -> None:
-        # Multi-host: arrays are saved as LOGICAL (global) tensors, so every
-        # process holds identical bytes after the device->host gather —
-        # exactly one process (0) may write them, or concurrent writers
-        # race the .tmp dance on shared storage.  Non-zero processes
-        # still run _flatten: the cross-host all-gather it implies is a
-        # collective every process must join.
-        arrays = _flatten(state)  # device->host now (consistent snapshot)
-        if jax.process_index() != 0:
+        if jax.process_count() > 1:
+            # Multi-process: globally-sharded arrays span devices this
+            # process cannot address, so the logical-tensor gather below
+            # would need a cross-host computation.  Write per-process shard
+            # files instead — synchronous by design (the barrier handshake
+            # must not race a later save's barriers from a stale thread).
+            self._save_sharded(step, state, extra)
             return
+        arrays = _flatten(state)  # device->host now (consistent snapshot)
         treedef = jax.tree_util.tree_structure(state)
         manifest = {
             "step": int(step),
@@ -147,6 +239,71 @@ class CheckpointManager:
                                             daemon=True)
             self._thread.start()
 
+    def _save_sharded(self, step: int, state: Any,
+                      extra: dict | None) -> None:
+        """Multi-process save: every process writes ONLY the shards its own
+        devices hold; process 0 writes the manifest and renames.  Three
+        phases ordered by coordination-service barriers (host RPC, no XLA
+        collective): mkdir -> shard writes -> rename.  Shared storage is
+        assumed (as for the single-process layout)."""
+        pid = jax.process_index()
+        arrays, index = _local_shards(state)  # device->host, local only
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if pid == 0:
+            self.wait()  # surface any earlier async failure
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)  # a previous crash's debris
+            os.makedirs(tmp)
+        _barrier(f"ckpt_mkdir_{step}")
+        with open(os.path.join(tmp, f"shards_{pid:05d}.npz"), "wb") as f:
+            np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        with open(os.path.join(tmp, f"shards_{pid:05d}.json"), "w") as f:
+            json.dump(index, f)
+            f.flush()
+            os.fsync(f.fileno())
+        _barrier(f"ckpt_shards_{step}")
+        if pid == 0:
+            # Global shapes/dtypes come from the leaves themselves (a
+            # jax.Array's .shape is the LOGICAL shape even when sharded
+            # across hosts) — restore needs them to size the assembly.
+            leaves = {}
+            for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+                dt = getattr(leaf, "dtype", None)
+                if dt is None:  # plain python leaf — never a global array
+                    dt = np.asarray(leaf).dtype
+                leaves[_leaf_key(path)] = {
+                    "shape": list(getattr(leaf, "shape", np.shape(leaf))),
+                    "dtype": np.dtype(dt).name,
+                }
+            manifest = {
+                "step": int(step),
+                "extra": extra or {},
+                "format": "sharded",
+                "processes": jax.process_count(),
+                "keys": sorted(leaves),
+                "leaves": leaves,
+                "treedef": str(jax.tree_util.tree_structure(state)),
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            _fsync_dir(tmp)
+            try:
+                os.replace(tmp, final)
+            except OSError:
+                shutil.rmtree(final, ignore_errors=True)
+                os.replace(tmp, final)
+            _fsync_dir(self.directory)
+            self._gc()
+        # Every process leaves only after the step is durably listed — a
+        # non-zero process must never race ahead and restore/poll a step
+        # whose rename hasn't happened yet.
+        _barrier(f"ckpt_final_{step}")
+
     def _run_write(self, write):
         def runner():
             try:
@@ -196,7 +353,10 @@ class CheckpointManager:
         base = os.path.join(self.directory, f"step_{step:08d}")
         with open(os.path.join(base, "manifest.json")) as f:
             manifest = json.load(f)
-        data = np.load(os.path.join(base, "arrays.npz"))
+        if manifest.get("format") == "sharded":
+            data: Any = _assemble_sharded(base, manifest)
+        else:
+            data = np.load(os.path.join(base, "arrays.npz"))
 
         flat_like = jax.tree_util.tree_flatten_with_path(like)[0]
         treedef = jax.tree_util.tree_structure(like)
@@ -214,7 +374,19 @@ class CheckpointManager:
                     "checkpoint from before a state-layout change).  "
                     f"Stored keys: {manifest['keys']}")
             arr = data[key]
-            if sh is not None:
+            if (sh is None and isinstance(leaf, jax.Array)
+                    and not leaf.is_fully_addressable):
+                # `like` was built under a multi-process mesh: inherit its
+                # sharding — a bare device_put would make a host-local array
+                # that cannot feed the global jitted step.
+                sh = leaf.sharding
+            if sh is not None and not getattr(sh, "is_fully_addressable",
+                                              True):
+                # Cross-host placement without a collective: hand each
+                # locally-addressable device its slice of the logical tensor.
+                leaves.append(jax.make_array_from_callback(
+                    arr.shape, sh, lambda idx, a=arr: a[idx]))
+            elif sh is not None:
                 leaves.append(jax.device_put(arr, sh))
             else:
                 leaves.append(jax.device_put(arr))

@@ -26,11 +26,15 @@ class ShardedBatchIterator:
         self._ctx = ctx
         self._seed = seed
         self._step = start_step
-        # Multi-host: each process generates/loads ONLY its batch slice and
-        # contributes its local devices' shards; the global array is
-        # assembled from per-process data without any cross-host transfer
-        # of example bytes.  Single-process runs (every test, the simulated
-        # host farms) keep the plain device_put path.
+        # Multi-host: every process evaluates the FULL synthetic batch (a
+        # pure function of (seed, step) — the price of keeping the batch
+        # sequence identical across process counts for elastic restarts)
+        # but TRANSFERS only its own contiguous row block into the global
+        # array, so no example bytes cross hosts.  A real loader swapped in
+        # here should instead read only rows [lo, lo+per) per process and
+        # hand them to make_array_from_process_local_data the same way.
+        # Single-process runs (every test, the simulated host farms) keep
+        # the plain device_put path.
         self._procs = jax.process_count()
 
     def __iter__(self):
@@ -44,9 +48,9 @@ class ShardedBatchIterator:
                    else self._ctx.data_axes[0])
             mesh = self._ctx.mesh
             if self._procs > 1:
-                # Per-host slice: this process's rows of the global batch
-                # (the batch dim is sharded over the data axes; processes
-                # own contiguous row blocks in mesh device order).
+                # Full batch generated locally (see __init__), then this
+                # process's contiguous row block is placed: the batch dim
+                # is sharded over the data axes in mesh device order.
                 batch = self._sample_fn(key)  # pure fn of (seed, step)
 
                 def place(x):

@@ -293,6 +293,20 @@ def run_gate(hosts: int = GATE_HOSTS, per_host: int = GATE_PER_HOST,
 
     ensure_host_platform_devices(hosts * per_host)
     mesh = make_multihost_mesh(hosts=hosts)
+    # The contract's per-shard token shape is GATE_BATCH / (hosts x dp);
+    # a non-divisible topology would silently floor it and every estimator
+    # would then "fail" the contract with confusing shape mismatches —
+    # reject the invocation up front, before any lowering.
+    data_ext = mesh.shape["host"] * mesh.shape["data"]
+    if GATE_BATCH % data_ext:
+        raise SystemExit(
+            f"[gate] invalid topology: the gate batch ({GATE_BATCH} rows) "
+            f"does not divide over the mesh data extent {data_ext} "
+            f"(= hosts {mesh.shape['host']} x per-host data "
+            f"{mesh.shape['data']}; per-host (dp, tp) is derived from "
+            f"--gate-per-host={per_host} by mesh_shape_for).  Pick "
+            f"--gate-hosts/--gate-per-host so hosts x dp divides "
+            f"{GATE_BATCH}.")
     base = _gate_cfg()
     report: dict = {"mesh": dict(mesh.shape), "estimators": {}}
     violations: list[str] = []

@@ -68,9 +68,11 @@ class RefreshIsland:
     """Double-buffered async sampler-stat refresh (``refresh_mode="overlap"``).
 
     Lifecycle per cadence window (DESIGN.md §7): on a cadence step the
-    island SNAPSHOTS the head table (a jitted copy — fresh buffers, so
-    step-donated ``TrainState`` arrays are never inputs of an in-flight
-    rebuild), dispatches the jitted ``make_refresh_fn`` rebuild WITHOUT
+    island SNAPSHOTS both rebuild inputs — the head table AND the carried
+    sampler state (jitted copies — fresh buffers, so step-donated
+    ``TrainState`` arrays are never inputs of an in-flight rebuild, no
+    matter which stream/executor runs it), dispatches the jitted
+    ``make_refresh_fn`` rebuild WITHOUT
     blocking the step stream, and SWAPS the result into the carried
     ``TrainState.sampler_state`` exactly ``cfg.refresh_stale_steps`` steps
     after dispatch (blocking there if the rebuild hasn't finished — a
@@ -88,6 +90,12 @@ class RefreshIsland:
         refresh = make_refresh_fn(cfg, ctx)
         self.enabled = refresh.carries_stats
         self._snapshot = jax.jit(lambda p: jnp.copy(api.head_table(p, cfg)))
+        # The carried SamplerState is a rebuild input too (stats/const
+        # buffers) and lives inside the donated TrainState — snapshot it at
+        # dispatch exactly like the head, so correctness never rests on
+        # same-stream enqueue ordering.
+        self._snap_state = jax.jit(
+            lambda s: jax.tree_util.tree_map(jnp.copy, s))
         self._refresh = jax.jit(refresh)
         self._inflight: tuple[int, Any] | None = None  # (dispatch step, fut)
         self._active_from = 0  # step whose head built the active stats
@@ -100,7 +108,7 @@ class RefreshIsland:
         if not self.enabled:
             return state
         sstate = self._refresh(self._snapshot(state.params),
-                               state.sampler_state)
+                               self._snap_state(state.sampler_state))
         jax.block_until_ready(sstate)
         self._active_from = int(jax.device_get(state.step))
         return dataclasses.replace(state, sampler_state=sstate)
@@ -108,9 +116,14 @@ class RefreshIsland:
     def before_step(self, i: int, state: TrainState
                     ) -> tuple[TrainState, dict[str, float]]:
         """Swap a due rebuild in, dispatch the next one; never blocks unless
-        the fixed-k swap deadline arrives before the rebuild finished."""
+        the fixed-k swap deadline arrives before the rebuild finished.
+
+        A disabled island (stateless sampler or dense estimator —
+        ``make_refresh_fn.carries_stats`` False) still returns the full
+        telemetry dict: fit() reads these keys unconditionally."""
         if not self.enabled:
-            return state, {}
+            return state, {"refresh_staleness_steps": 0.0,
+                           "refresh_block_ms": 0.0}
         block_ms = 0.0
         if self._inflight is not None and i - self._inflight[0] >= self.k:
             sent, fut = self._inflight
@@ -123,8 +136,9 @@ class RefreshIsland:
             self._inflight = None
             self.swaps += 1
         if i % self.cadence == 0 and self._inflight is None:
-            self._inflight = (i, self._refresh(self._snapshot(state.params),
-                                               state.sampler_state))
+            self._inflight = (i, self._refresh(
+                self._snapshot(state.params),
+                self._snap_state(state.sampler_state)))
         return state, {"refresh_staleness_steps": float(i - self._active_from),
                        "refresh_block_ms": block_ms}
 
@@ -141,9 +155,11 @@ def fit(cfg: ArchConfig, ctx: ShardCtx, opt: GradientTransform,
         max_len: int = 4096) -> LoopResult:
     # Donation audit (DESIGN.md §7): the TrainState argument is donated so
     # params/opt/sampler buffers are reused in place (inert on CPU — a
-    # warning, not an error).  Safe against the overlap island: its inputs
-    # are a jitted head COPY and its outputs share no buffers with the
-    # donated state (make_refresh_fn's const copy).
+    # warning, not an error).  Safe against the overlap island: BOTH its
+    # inputs are jitted copies taken at dispatch (head snapshot + carried
+    # sampler-state snapshot) and its outputs share no buffers with the
+    # donated state (make_refresh_fn's const copy) — no donated buffer is
+    # ever an input or output of an in-flight rebuild.
     step_fn = jax.jit(make_train_step(cfg, ctx, opt), donate_argnums=(0,))
     island = RefreshIsland(cfg, ctx) if cfg.refresh_mode == "overlap" \
         else None

@@ -86,9 +86,10 @@ def make_refresh_fn(cfg: ArchConfig, ctx: ShardCtx
     """Unconditional sampler-stat rebuild from a head-table snapshot.
 
     The refresh-island half of ``refresh_mode="overlap"`` (DESIGN.md §7):
-    the loop jits this once, dispatches it against a SNAPSHOT of the head
-    (fresh buffers — donation of TrainState can never invalidate its
-    inputs) without blocking the step stream, and swaps the result into
+    the loop jits this once, dispatches it against SNAPSHOTS of the head
+    and the carried sampler state (fresh buffers — donation of TrainState
+    can never invalidate its inputs) without blocking the step stream,
+    and swaps the result into
     the carried ``TrainState.sampler_state`` a fixed
     ``cfg.refresh_stale_steps`` steps later.  Mathematically identical to
     the in-step refresh at the same head; the only difference is WHICH

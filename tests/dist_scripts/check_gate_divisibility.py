@@ -1,0 +1,24 @@
+"""The gate's topology guard: a --gate-hosts/--gate-per-host combo whose
+data extent does not divide GATE_BATCH must die with the pointed
+SystemExit BEFORE any lowering — not floor the contract's per-shard token
+shape and report confusing "CONTRACT VIOLATION"s for every estimator.
+
+Runs in its own process: 6 hosts x 2 devices forces a 12-device backend,
+which must not leak into the 32-device main-gate script."""
+from repro.launch.dryrun import GATE_BATCH, run_gate
+
+try:
+    # hosts=6, per_host=2 -> per-host (dp, tp) = (1, 2) -> data extent 6;
+    # GATE_BATCH=32 % 6 != 0.
+    run_gate(hosts=6, per_host=2)
+except SystemExit as e:
+    msg = str(e)
+    assert "invalid topology" in msg and str(GATE_BATCH) in msg, msg
+    assert "data extent 6" in msg, msg
+    print("non-divisible topology raised:", msg.splitlines()[0][:80])
+else:
+    raise AssertionError(
+        "run_gate(hosts=6, per_host=2) lowered instead of rejecting the "
+        f"non-divisible data extent (GATE_BATCH={GATE_BATCH})")
+
+print("GATE DIVISIBILITY CHECKS PASSED")

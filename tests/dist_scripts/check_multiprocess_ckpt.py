@@ -1,0 +1,127 @@
+"""REAL multi-process checkpoint save/restore: two jax.distributed worker
+processes over localhost, each owning one CPU device of a 2-host
+("host", "data", "model") mesh.
+
+This is the test the simulated host farms cannot provide: with
+process_count > 1 the TrainState-style arrays are NOT fully addressable,
+so the old logical-tensor save path (`jax.device_get` per leaf) raised
+before the process-0 guard.  The manager must instead write per-process
+shard files (no collective — this CPU backend cannot run multi-process
+XLA computations at all, which is exactly what makes this an honest
+check) and reassemble them on restore.
+
+Run with no args: spawns the two workers and asserts their exit status.
+"""
+import json
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+
+SELF = os.path.abspath(__file__)
+
+
+def worker(pid: int, nprocs: int, port: int, ckdir: str) -> None:
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax
+
+    jax.distributed.initialize(coordinator_address=f"localhost:{port}",
+                               num_processes=nprocs, process_id=pid)
+    assert jax.process_count() == nprocs
+
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.launch.mesh import make_multihost_mesh
+
+    mesh = make_multihost_mesh(hosts=nprocs)
+    assert mesh.axis_names == ("host", "data", "model")
+
+    # A sharded leaf (distinct rows per host), a replicated matrix, and a
+    # replicated scalar step — the three layouts a TrainState carries.
+    local_w = np.arange(3 * 4, dtype=np.float32).reshape(3, 4) + 100 * pid
+    w = jax.make_array_from_process_local_data(
+        NamedSharding(mesh, P("host")), local_w, (3 * nprocs, 4))
+    const = jax.make_array_from_callback(
+        (2, 2), NamedSharding(mesh, P()),
+        lambda idx: np.asarray([[1.5, -2.0], [0.25, 7.0]], np.float32)[idx])
+    step = jax.make_array_from_callback(
+        (), NamedSharding(mesh, P()),
+        lambda idx: np.asarray(5, np.int32)[idx])
+    state = {"params": {"w": w, "const": const}, "step": step}
+    assert not w.is_fully_addressable  # the case device_get cannot handle
+
+    mgr = CheckpointManager(ckdir, keep=2)
+    mgr.save(5, state, extra={"step": 5, "data_state": {"seed": 1}},
+             blocking=True)
+
+    # Every process sees the renamed step; the payload is per-process
+    # shard files plus one process-0 manifest.
+    base = os.path.join(ckdir, "step_00000005")
+    names = sorted(os.listdir(base))
+    assert "manifest.json" in names, names
+    for p in range(nprocs):
+        assert f"shards_{p:05d}.npz" in names, names
+    assert not any(n.endswith(".tmp") for n in os.listdir(ckdir))
+    with open(os.path.join(base, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == "sharded"
+    assert manifest["processes"] == nprocs
+
+    # Restore into zero-valued arrays with the SAME shardings and compare
+    # this process's addressable shards against what it saved.
+    like = jax.tree_util.tree_map(
+        lambda x: jax.make_array_from_callback(
+            x.shape, x.sharding,
+            lambda idx, s=x: np.zeros(s.shape, s.dtype)[idx]),
+        state)
+    restored, extra = mgr.restore(like=like)
+    assert extra["data_state"] == {"seed": 1}
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        assert b.sharding.is_equivalent_to(a.sharding, a.ndim), (
+            a.sharding, b.sharding)
+        for sa, sb in zip(a.addressable_shards, b.addressable_shards):
+            np.testing.assert_array_equal(np.asarray(sa.data),
+                                          np.asarray(sb.data))
+
+    # Keep-K GC still runs (on process 0 only) across multi-process saves.
+    bumped = jax.tree_util.tree_map(lambda x: x, state)
+    mgr.save(6, bumped, blocking=True)
+    mgr.save(7, bumped, blocking=True)
+    assert mgr.all_steps() == [6, 7], mgr.all_steps()
+    print(f"worker {pid}: multiprocess save/restore ok", flush=True)
+
+
+def main() -> None:
+    nprocs = 2
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        port = s.getsockname()[1]
+    with tempfile.TemporaryDirectory() as ckdir:
+        procs = [
+            subprocess.Popen(
+                [sys.executable, SELF, "--worker", str(pid), str(nprocs),
+                 str(port), ckdir],
+                stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+            for pid in range(nprocs)
+        ]
+        outs = [p.communicate(timeout=300)[0] for p in procs]
+        for pid, (p, out) in enumerate(zip(procs, outs)):
+            if p.returncode != 0:
+                raise SystemExit(
+                    f"worker {pid} failed (rc={p.returncode}):\n{out}")
+            assert f"worker {pid}: multiprocess save/restore ok" in out, out
+    print("MULTIPROCESS CKPT CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--worker":
+        worker(int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4]),
+               sys.argv[5])
+    else:
+        main()

@@ -124,9 +124,29 @@ def test_elastic_restore_across_mesh_shapes():
 
 
 @pytest.mark.slow
+def test_multiprocess_checkpoint_save():
+    """TRUE multi-process save path: two jax.distributed worker processes
+    (arrays span non-addressable devices) write per-process shard files,
+    process 0 writes the manifest, and restore reassembles + re-places the
+    logical tensors — no cross-host collective anywhere (the CPU backend
+    cannot run one, which is what the old device_get path tripped over)."""
+    out = _run("check_multiprocess_ckpt.py")
+    assert "MULTIPROCESS CKPT CHECKS PASSED" in out
+
+
+@pytest.mark.slow
 def test_dryrun_collective_gate():
     """The CI gate end-to-end: 16-host HLO collective contract for every
     estimator, twice in one process (lazy idempotent device forcing), and
     the pointed error on a conflicting device count."""
     out = _run("check_dryrun_gate.py", timeout=580)
     assert "DRYRUN GATE CHECKS PASSED" in out
+
+
+@pytest.mark.slow
+def test_gate_rejects_non_divisible_topology():
+    """A gate invocation whose (hosts x dp) data extent does not divide
+    GATE_BATCH must fail with the pointed topology error before lowering,
+    not floor the expected shard shape into phantom contract violations."""
+    out = _run("check_gate_divisibility.py", timeout=120)
+    assert "GATE DIVISIBILITY CHECKS PASSED" in out

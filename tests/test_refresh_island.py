@@ -138,6 +138,48 @@ def test_overlap_still_learns():
     assert np.mean(res.losses[-10:]) < np.mean(res.losses[:10]) - 0.05
 
 
+def test_overlap_with_dense_estimator_is_inert():
+    """refresh_mode="overlap" with a combo that carries no stats (dense
+    estimator "full") leaves the island disabled — fit() must still run
+    and see the full telemetry dict (a bare {} from before_step KeyError'd
+    at the first step), reporting zero staleness and zero swaps."""
+    cfg = _cfg(refresh_mode="overlap", estimator="full",
+               sampler_refresh_every=4, refresh_stale_steps=2)
+    res = _run(cfg, steps=4)
+    assert res.refresh_swaps == 0
+    assert res.refresh_staleness == [0, 0, 0, 0]
+    assert np.all(np.isfinite(res.losses))
+
+
+def test_dispatch_inputs_are_snapshots():
+    """Donation safety at the DISPATCH site: the buffers handed to an
+    in-flight rebuild must be copies, never the live (donatable)
+    TrainState's own head/sampler buffers."""
+    from repro.train.loop import RefreshIsland
+    from repro.train.step import init_train_state
+    cfg = _cfg(refresh_mode="overlap", sampler_refresh_every=4,
+               refresh_stale_steps=2)
+    opt = make_optimizer("adamw", 1e-2)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, CTX, opt, max_len=8)
+    island = RefreshIsland(cfg, CTX)
+    assert island.enabled
+
+    def ptrs(tree):
+        out = set()
+        for leaf in jax.tree_util.tree_leaves(tree):
+            try:
+                out.add(leaf.unsafe_buffer_pointer())
+            except Exception:  # noqa: BLE001 — sharded arrays / API drift
+                pass
+        return out
+
+    live = ptrs(state.sampler_state) | ptrs(api.head_table(state.params, cfg))
+    snap = ptrs(island._snap_state(state.sampler_state)) \
+        | ptrs(island._snapshot(state.params))
+    assert live and snap
+    assert not (live & snap)
+
+
 def test_sync_mode_reports_cadence_staleness():
     cfg = _cfg(refresh_mode="sync", sampler_refresh_every=3)
     res = _run(cfg, steps=9)
