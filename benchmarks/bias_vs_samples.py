@@ -28,7 +28,8 @@ from repro.configs import get_config
 SAMPLERS_DEFAULT = ["uniform", "softmax", "block-quadratic",
                     "quadratic-oracle", "rff"]
 
-GRAD_BIAS_SAMPLERS = ["uniform", "quadratic-oracle", "rff", "softmax"]
+GRAD_BIAS_SAMPLERS = ["uniform", "quadratic-oracle", "midx", "rff",
+                      "softmax"]
 
 
 def grad_bias(samplers=None, ms=(16, 64), n=256, d=12, n_queries=4,
@@ -78,6 +79,13 @@ def grad_bias(samplers=None, ms=(16, 64), n=256, d=12, n_queries=4,
             return jnp.full((n,), -np.log(n))
         if name == "rff":
             sampler = make_sampler("rff", dim=rff_dim, leaf_size=16)
+            state = sampler.init(jax.random.fold_in(key, 2), w)
+            return sampler.all_class_logq(state, h)
+        if name == "midx":
+            # quantized two-level q (DESIGN.md §2.9): codeword-pair mass
+            # over the centroid codebooks, residual-exact within the list —
+            # sits between uniform and the exact quadratic oracle
+            sampler = make_sampler("midx", codewords=8, list_size=16)
             state = sampler.init(jax.random.fold_in(key, 2), w)
             return sampler.all_class_logq(state, h)
         sampler = make_sampler(name)

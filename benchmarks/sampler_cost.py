@@ -8,6 +8,8 @@ Compares, as the number of classes n grows:
   * tree sampling, sequential vs level-synchronous batched descent
     (DESIGN.md §2.6): T*m*depth per-draw Bernoulli steps collapse to
     depth batched steps per batch of draws
+  * quantized inverted multi-index sampling (DESIGN.md §2.9) and its
+    serving twin's int8-vs-fp32 codebook payload + decode latency
 and the statistics refresh (one batched Gram matmul).
 """
 from __future__ import annotations
@@ -20,7 +22,13 @@ import jax.numpy as jnp
 from benchmarks.common import csv_row, time_fn
 from repro.core import blocks, tree
 from repro.core.kernel_fns import quadratic_kernel
-from repro.core.samplers import BlockSampler, TapasSampler, softmax_oracle
+from repro.core.samplers import (
+    BlockSampler,
+    MIDXSampler,
+    TapasSampler,
+    softmax_oracle,
+)
+from repro.serve import quantized_index, retrieval
 
 
 def refresh_overlap(n=256, quiet=False):
@@ -149,6 +157,37 @@ def run(ns=(4096, 16384, 65536), d=64, m=64, t_batch=64, quiet=False):
             f"sample/tree-batched/n={n}", us_bat,
             f"seq-steps={depth} step-ratio={t_batch * m:.0f}x "
             f"speedup={us_seq / us_bat:.2f}x"))
+
+        # quantized inverted multi-index (MIDX, DESIGN.md §2.9): codeword-
+        # pair mass over the K x K codebook cross-product replaces the
+        # O(n_blocks) block-mass scan; the exact residual re-score stays
+        # confined to ONE posting list per draw.
+        msampler = MIDXSampler(codewords=16, list_size=64)
+        mstate = msampler.init(jax.random.PRNGKey(9), w)
+        f_midx = jax.jit(lambda h, key: msampler.sample_batch(
+            mstate, h, m, key))
+        us = time_fn(f_midx, hs, jax.random.PRNGKey(9))
+        rows.append(csv_row(f"sample/midx/n={n}", us,
+                            f"per-query={us/t_batch:.1f}us"))
+
+        # the SAME structure as the serving artifact: int8 vs fp32 codebook
+        # payload (the refresher's shipping cost) and their decode latency.
+        fp_idx = retrieval.build_index(w)
+        fp_bytes = quantized_index.payload_bytes(fp_idx)
+        kq = min(16, n)
+        for bits in (8, 32):
+            q = quantized_index.build_quantized_index(
+                w, codewords=16, list_size=64, bits=bits)
+            beam = max(1, q.num_lists_shard // 4)
+            f_dec = jax.jit(lambda h, q=q, beam=beam:
+                            quantized_index.decode_topk(q, h, kq, beam))
+            us = time_fn(f_dec, hs)
+            qb = quantized_index.payload_bytes(q)
+            tag = "int8" if bits == 8 else "fp32"
+            rows.append(csv_row(
+                f"index/midx-{tag}/n={n}", us,
+                f"payload_bytes={qb} fp32_index_ratio={fp_bytes/qb:.2f}x "
+                f"beam={beam}"))
 
         # statistics refresh
         f_build = jax.jit(lambda ww: blocks.build(ww, block))

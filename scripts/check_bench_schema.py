@@ -54,12 +54,18 @@ OPTIONAL_ROW_KEYS = {
 #: acceptance criteria, enforced on every emitted trajectory file
 REQUIRED_ROW_PREFIXES = {
     "sampler_cost": ["refresh/train-step-sync", "refresh/train-step-overlap",
-                     "refresh/island-rebuild"],
+                     "refresh/island-rebuild",
+                     # quantized MIDX PR: sampling cost + the int8-vs-fp32
+                     # serving-payload comparison must land in every file
+                     "sample/midx", "index/midx-int8", "index/midx-fp32"],
 }
 REQUIRED_ROW_PREDICATES = {
-    # at least one k-stale refresh-island row (k > 0) must be present
+    # at least one k-stale refresh-island row (k > 0) must be present, and
+    # the quantized MIDX family must appear in the bias table
     "grad_bias": [("staleness row (staleness_k key)",
-                   lambda r: "staleness_k" in r)],
+                   lambda r: "staleness_k" in r),
+                  ("midx sampler row",
+                   lambda r: r.get("sampler") == "midx")],
 }
 
 

@@ -107,6 +107,16 @@ class ArchConfig:
     tapas_pool: int = 1024
     tapas_base: str = "block-quadratic-shared"
     tapas_tau: float = 1.0
+    # midx quantized inverted multi-index (sampler="midx"; DESIGN.md §2.9):
+    # number of codebooks (2 = coarse + residual product quantization,
+    # 1 = coarse only), codewords per codebook, and the row-payload width
+    # of the SERVING export (serve/quantized_index.py): 8 -> int8 rows with
+    # per-row scales, 32 -> fp32 rows.  Training-side sampling always
+    # scores stage 2 in fp32 — midx_bits shapes the shipped index only.
+    # Posting-list size rides the shared sampler_block knob.
+    midx_codebooks: int = 2
+    midx_codewords: int = 16
+    midx_bits: int = 8
     # loss estimator over the sampled negatives (core/estimators.py,
     # DESIGN.md §6): "sampled-softmax" (the paper's eq. 2/3 — default),
     # "nce", "sampled-logistic", or "full" (dense oracle; no sampling).
@@ -176,6 +186,16 @@ class ArchConfig:
                     f"vocab-parallel degree tp={tp} (each shard draws "
                     "pool/tp candidates from its local base distribution "
                     "— DESIGN.md §2.8)")
+        if self.sampler in ("midx", "midx-oracle"):
+            if self.midx_codebooks not in (1, 2):
+                bad(f"midx_codebooks must be 1 or 2, got "
+                    f"{self.midx_codebooks}")
+            if self.midx_codewords <= 0:
+                bad(f"midx_codewords must be positive, got "
+                    f"{self.midx_codewords}")
+        if self.midx_bits not in (8, 32):
+            bad(f"midx_bits must be 8 (int8 rows) or 32 (fp32 rows), got "
+                f"{self.midx_bits}")
         samples = make_estimator(self.estimator).needs_sampling
         if samples and not smp.supports_head_loss():
             bad(f"sampler '{self.sampler}' cannot drive the head loss: it "
@@ -273,6 +293,7 @@ class ArchConfig:
             sampler_proj_rank=None,
             rff_dim=64,
             tapas_pool=128,
+            midx_codewords=8,
             remat=False,
         )
         if self.n_heads:

@@ -47,6 +47,14 @@ Distributions (paper §4.1.2 + Fig. 2, plus the RFF family of Rawat et al.
                      hierarchy — near-softmax q at O(D log n) per draw
   rff-oracle         q ∝ <phi(h), phi(w_i)> brute force (the statistical
                      reference for the rff family)
+  midx               quantized inverted multi-index (Chen et al. 2025,
+                     DESIGN.md §2.9): codeword-PAIR masses over a two-
+                     codebook cross-product select a balanced posting
+                     list, exact kernel scoring within — sub-linear
+                     stage-1 cost, exact composed logq
+  midx-oracle        brute-force twin: dense categorical from the SAME
+                     composed midx distribution (the statistical
+                     reference for the midx family)
   tapas              two-pass mega-batch sampling (Bai et al. 2017, TAPAS;
                      DESIGN.md §2.8): pass 1 draws one large shared pool of
                      P candidates through ANY single-stage base family,
@@ -67,7 +75,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core import blocks, hierarchy, tree
+from repro.core import blocks, hierarchy, midx, tree
 from repro.core.blocks import categorical_rows  # noqa: F401  (re-export:
 # the sharded tapas path and its host-reconstruction test import it here)
 from repro.core.kernel_fns import (
@@ -660,6 +668,121 @@ class RFFSampler(Sampler):
                                           self.tau, h, keys)
 
 
+@dataclasses.dataclass(frozen=True)
+class MIDXSampler(Sampler):
+    """Quantized inverted multi-index sampler (core/midx.py, DESIGN.md
+    §2.9): stage 1 draws a balanced posting list from codeword-PAIR
+    kernel masses over the c1 x c2 codebook cross-product (two (K, d)
+    matmuls + an O(P) gather — sub-linear in vocab), stage 2 scores the
+    list's members with the exact kernel.  The reported logq is the
+    exact composed probability, so eq. 2 stays unbiased at any codebook
+    resolution (quantization error is bias-of-q only, like staleness).
+
+    A first-class train-island citizen: the carried state is the whole
+    quantized index — codebooks, codeword pairs, counts, permutation and
+    the packed member table — refreshed on the cadence, P('model')-
+    sharded over every leading (per-shard) axis, overlap-island
+    compatible.  The codebooks are DETERMINISTIC (fixed-iteration
+    strided-init k-means), so there are no carried constants and a
+    refresh is a pure function of the head table."""
+
+    kernel: SamplingKernel = dataclasses.field(
+        default_factory=quadratic_kernel)
+    codewords: int = 16
+    codebooks: int = 2
+    list_size: int | None = None
+    name: str = "midx"
+    carries_state = True
+
+    def _build(self, w, n_valid=None):
+        return midx.build(w, codewords=self.codewords,
+                          codebooks=self.codebooks,
+                          list_size=self.list_size, n_valid=n_valid)
+
+    def build_stats(self, w, n_valid, const):
+        s = self._build(w, n_valid)
+        return {"c1": s.c1, "c2": s.c2, "codes": s.codes, "cnt": s.cnt,
+                "perm": s.perm, "wq": s.wq}
+
+    def hydrate(self, state, n_valid):
+        st = state.stats
+        return midx.MidxStats(
+            c1=st["c1"], c2=st["c2"], codes=st["codes"], cnt=st["cnt"],
+            perm=st["perm"], wq=st["wq"],
+            n_valid=jnp.asarray(n_valid, jnp.int32))
+
+    def state_shapes(self, cfg, tp):
+        v_l, d = _head_dims(cfg, tp)
+        # ONE dims formula with build_stats (midx.list_dims), resolved
+        # against the SHARD-LOCAL row count the refresh island sees.
+        num_lists_l, leaf = midx.list_dims(v_l, d, self.list_size)
+        k2 = self.codewords if self.codebooks == 2 else 1
+        sds = jax.ShapeDtypeStruct
+        stats = {"c1": sds((tp * self.codewords, d), jnp.float32),
+                 "c2": sds((tp * k2, d), jnp.float32),
+                 "codes": sds((tp * num_lists_l, 2), jnp.int32),
+                 "cnt": sds((tp * num_lists_l,), jnp.float32),
+                 "perm": sds((tp * num_lists_l * leaf,), jnp.int32),
+                 "wq": sds((tp * num_lists_l, leaf, d), jnp.float32)}
+        return SamplerState(stats=stats, const={})
+
+    def init(self, key, w):
+        return self._build(w)
+
+    def refresh(self, state, w):
+        return self._build(w)
+
+    def all_class_logq(self, state, h):
+        """Exact per-class log q of the composed two-stage distribution
+        (test oracle, O(n d)), indexed by ORIGINAL local class id."""
+        return midx.all_class_logq(state, self.kernel, h)
+
+    def sample(self, state, h, m, key):
+        return midx.sample(state, self.kernel, h, m, key)
+
+    def sample_batch(self, state, h, m, key):
+        # Natively batched: stage-1 masses for all T queries in one
+        # codebook contraction, stage-2 gathered-row scoring fused per
+        # (query, draw) — the midx Pallas kernels' hot loop.
+        return midx.sample_batch(state, self.kernel, h, m, key)
+
+
+@dataclasses.dataclass(frozen=True)
+class MIDXOracleSampler(Sampler):
+    """Brute-force midx twin: builds the SAME quantized index, then draws
+    dense categoricals from its exact composed all-class distribution —
+    the statistical reference ``"midx"`` must match draw-for-logq."""
+
+    kernel: SamplingKernel = dataclasses.field(
+        default_factory=quadratic_kernel)
+    codewords: int = 16
+    codebooks: int = 2
+    list_size: int | None = None
+    name: str = "midx-oracle"
+
+    def _build(self, w, n_valid=None):
+        return midx.build(w, codewords=self.codewords,
+                          codebooks=self.codebooks,
+                          list_size=self.list_size, n_valid=n_valid)
+
+    def init(self, key, w):
+        return self._build(w)
+
+    def refresh(self, state, w):
+        return self._build(w)
+
+    def logq_all(self, state, h):
+        return midx.all_class_logq(state, self.kernel, h)
+
+    def sample(self, state, h, m, key):
+        logq = self.logq_all(state, h)
+        ids = jax.random.categorical(key, logq, shape=(m,)).astype(jnp.int32)
+        return ids, logq[ids]
+
+    def island_state(self, head_full, n_valid):
+        return self._build(head_full, n_valid)
+
+
 def pool_log_inclusion(logq1: Array, pool_size: int) -> Array:
     """log pi_j = log(1 - (1 - q1_j)^P): the probability class j appears in
     a pool of P i.i.d. draws from q1, given per-draw log q1 at the drawn
@@ -826,6 +949,24 @@ def _rff_from_cfg(cfg) -> Sampler:
                       leaf_size=cfg.sampler_block)
 
 
+def _midx_from_cfg(cfg) -> Sampler:
+    if cfg.sampler_proj_rank:
+        raise ValueError(
+            "sampler='midx' ignores sampler_proj_rank — the codebooks ARE "
+            "the compression; set sampler_proj_rank=None")
+    return MIDXSampler(kernel=quadratic_kernel(cfg.sampler_alpha),
+                       codewords=cfg.midx_codewords,
+                       codebooks=cfg.midx_codebooks,
+                       list_size=cfg.sampler_block)
+
+
+def _midx_oracle_from_cfg(cfg) -> Sampler:
+    return MIDXOracleSampler(kernel=quadratic_kernel(cfg.sampler_alpha),
+                             codewords=cfg.midx_codewords,
+                             codebooks=cfg.midx_codebooks,
+                             list_size=cfg.sampler_block)
+
+
 def _tapas_from_cfg(cfg) -> Sampler:
     if cfg.tapas_base == "tapas":
         raise ValueError(
@@ -859,6 +1000,8 @@ _REGISTRY: dict[str, _Family] = {
         partial(BlockSampler, shared=True),
         partial(_block_from_cfg, shared=True)),
     "rff": _Family(RFFSampler, _rff_from_cfg),
+    "midx": _Family(MIDXSampler, _midx_from_cfg),
+    "midx-oracle": _Family(MIDXOracleSampler, _midx_oracle_from_cfg),
     "tapas": _Family(TapasSampler, _tapas_from_cfg),
 }
 

@@ -19,6 +19,8 @@ from repro.kernels.fused_head import MASK_CORR
 from repro.kernels.fused_head import fused_lse as _fused_lse
 from repro.kernels.fused_head import fused_lse_bwd as _fused_lse_bwd
 from repro.kernels.leaf_scores import leaf_scores as _leaf_scores
+from repro.kernels.midx_scores import midx_member_scores as _midx_member
+from repro.kernels.midx_scores import midx_pair_masses as _midx_pair
 from repro.kernels import ref
 from repro.kernels.rff_features import rff_features as _rff_features
 from repro.kernels.sampled_loss import sampled_loss as _sampled_loss
@@ -81,6 +83,40 @@ def leaf_dots(h: Array, rows: Array) -> Array:
     The exact-scoring step of serving-side beam retrieval: same kernel and
     VMEM schedule as ``leaf_scores``, without the kernelization."""
     return _leaf_call(h, rows, alpha=0.0, square=False)
+
+
+def midx_list_masses(h: Array, c1: Array, c2: Array, codes: Array,
+                     cnt: Array, alpha: float = 100.0) -> Array:
+    """h: (T, d); c1: (K1, d); c2: (K2, d); codes: (P, 2); cnt: (P,)
+    -> (T, P) fp32 stage-1 MIDX sampling masses (DESIGN.md §2.9).
+
+    The codeword-PAIR expansion ct[j] = c1[a1_j] + c2[a2_j] is an O(P d)
+    XLA gather here; the kernel fuses the matvec + kernel transform +
+    count multiply.  Padded lists get cnt 0, hence mass exactly 0."""
+    ct = (c1.astype(jnp.float32)[codes[:, 0]]
+          + c2.astype(jnp.float32)[codes[:, 1]])
+    t_tile = min(128, max(8, 1 << (h.shape[0] - 1).bit_length()))
+    p_tile = min(128, max(8, 1 << (ct.shape[0] - 1).bit_length()))
+    hp, t = _pad_to(h, 0, t_tile)
+    ctp, p = _pad_to(ct, 0, p_tile)
+    cp, _ = _pad_to(cnt, 0, p_tile)
+    out = _midx_pair(hp, ctp, cp, alpha=alpha,
+                     t_tile=min(t_tile, hp.shape[0]),
+                     p_tile=min(p_tile, ctp.shape[0]),
+                     interpret=_interpret())
+    return out[:t, :p]
+
+
+def midx_member_scores(h: Array, rows: Array, alpha: float = 100.0) -> Array:
+    """h: (G, d); rows: (G, L, d) gathered posting lists -> (G, L) fp32
+    exact within-list quadratic-kernel scores (DESIGN.md §2.9)."""
+    g_tile = min(128, max(8, 1 << (h.shape[0] - 1).bit_length()))
+    hp, g = _pad_to(h, 0, g_tile)
+    rp, _ = _pad_to(rows, 0, g_tile)
+    out = _midx_member(hp, rp, alpha=alpha,
+                       g_tile=min(g_tile, hp.shape[0]),
+                       interpret=_interpret())
+    return out[:g]
 
 
 def rff_features(w: Array, omega: Array, mask: Array, logshift: Array, *,

@@ -34,6 +34,26 @@ def leaf_dots_ref(h: Array, rows: Array) -> Array:
                       h.astype(jnp.float32))
 
 
+def midx_list_masses_ref(h: Array, c1: Array, c2: Array, codes: Array,
+                         cnt: Array, alpha: float) -> Array:
+    """Fused codeword-pair mass oracle (DESIGN.md §2.9).
+
+    h: (T, d); c1: (K1, d); c2: (K2, d); codes: (P, 2); cnt: (P,)
+    -> (T, P) masses cnt_j * (alpha * <h, c1[a1_j] + c2[a2_j]>^2 + 1)."""
+    ct = (c1.astype(jnp.float32)[codes[:, 0]]
+          + c2.astype(jnp.float32)[codes[:, 1]])          # (P, d)
+    dots = h.astype(jnp.float32) @ ct.T                   # (T, P)
+    return cnt[None, :] * (alpha * jnp.square(dots) + 1.0)
+
+
+def midx_member_scores_ref(h: Array, rows: Array, alpha: float) -> Array:
+    """h: (G, d); rows: (G, L, d) -> (G, L) exact within-list kernel
+    scores alpha * dot^2 + 1."""
+    dots = jnp.einsum("gld,gd->gl", rows.astype(jnp.float32),
+                      h.astype(jnp.float32))
+    return alpha * jnp.square(dots) + 1.0
+
+
 def rff_features_ref(w: Array, omega: Array, mask: Array, logshift,
                      tau: float) -> Array:
     """w: (L, B, d); omega: (D, d); mask: (L, B) -> (L, D) masked per-leaf

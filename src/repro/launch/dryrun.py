@@ -225,6 +225,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 GATE_HOSTS = 16
 GATE_PER_HOST = 2
 GATE_BATCH = 32
+#: samplers whose carried statistics ride the island (beyond the base
+#: config's block family, which every estimator cell already compiles):
+#: the quantized multi-index must keep the same collective schedule — its
+#: codebook stats are shard-local, so sampling adds NO collectives.
+GATE_SAMPLERS = ("midx",)
 
 
 def _gate_cfg():
@@ -279,9 +284,10 @@ def gate_contract(cfg, ctx, est_name: str) -> list[dict]:
 
 def run_gate(hosts: int = GATE_HOSTS, per_host: int = GATE_PER_HOST,
              out_dir: str | None = None) -> dict:
-    """Lower the train step for EVERY registry estimator on a simulated
+    """Lower the train step for EVERY registry estimator — plus each
+    ``GATE_SAMPLERS`` family under the default estimator — on a simulated
     ``hosts``-host mesh and assert the collective contract.  Returns the
-    per-estimator record (also written to ``out_dir`` when given); raises
+    per-cell record (also written to ``out_dir`` when given); raises
     SystemExit(1) on any violation."""
     import dataclasses
 
@@ -308,11 +314,11 @@ def run_gate(hosts: int = GATE_HOSTS, per_host: int = GATE_PER_HOST,
             f"--gate-hosts/--gate-per-host so hosts x dp divides "
             f"{GATE_BATCH}.")
     base = _gate_cfg()
-    report: dict = {"mesh": dict(mesh.shape), "estimators": {}}
+    report: dict = {"mesh": dict(mesh.shape), "estimators": {},
+                    "samplers": {}}
     violations: list[str] = []
-    for est in estimator_names():
-        cfg = dataclasses.replace(base, name=f"{base.name}-{est}",
-                                  estimator=est)
+
+    def lower_gate_cell(cfg):
         with mesh:
             ctx = ctx_for_train(mesh, cfg)
             opt = make_optimizer("adamw", 1e-4)
@@ -334,23 +340,37 @@ def run_gate(hosts: int = GATE_HOSTS, per_host: int = GATE_PER_HOST,
             t0 = time.time()
             compiled = jax.jit(step_fn, donate_argnums=(0,)).lower(
                 state_sds, batch_sds, key_sds).compile()
-        txt = compiled.as_text()
-        errs = check_collective_contract(txt, gate_contract(cfg, ctx, est))
+        return compiled.as_text(), ctx, round(time.time() - t0, 1)
+
+    def check_gate_cell(section, label, cfg):
+        txt, ctx, compile_s = lower_gate_cell(cfg)
+        errs = check_collective_contract(
+            txt, gate_contract(cfg, ctx, cfg.estimator))
         colls = collective_ops(txt)
-        report["estimators"][est] = {
-            "compile_s": round(time.time() - t0, 1),
+        report[section][label] = {
+            "compile_s": compile_s,
             "collectives": sorted(
                 {f"{c['op']}@{c['group_size']}"
                  f"{c['dims']}:{c['reduce'] or c['dtype']}" for c in colls}),
             "violations": errs,
         }
         status = "OK" if not errs else "CONTRACT VIOLATION"
-        print(f"[gate] {est:18s} {status} "
-              f"({len(colls)} collective ops, "
-              f"{report['estimators'][est]['compile_s']}s)", flush=True)
+        print(f"[gate] {label:18s} {status} "
+              f"({len(colls)} collective ops, {compile_s}s)", flush=True)
         for e in errs:
             print(f"       - {e}", flush=True)
-        violations.extend(f"{est}: {e}" for e in errs)
+        violations.extend(f"{label}: {e}" for e in errs)
+
+    for est in estimator_names():
+        check_gate_cell("estimators", est,
+                        dataclasses.replace(base, name=f"{base.name}-{est}",
+                                            estimator=est))
+    # sampler dimension: families with island-carried stats must compile on
+    # the multi-host mesh WITHOUT changing the collective schedule
+    for smp in GATE_SAMPLERS:
+        check_gate_cell("samplers", smp,
+                        dataclasses.replace(base, name=f"{base.name}-{smp}",
+                                            sampler=smp, sampler_block=32))
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
         with open(os.path.join(out_dir, "collective_gate.json"), "w") as f:
@@ -359,8 +379,9 @@ def run_gate(hosts: int = GATE_HOSTS, per_host: int = GATE_PER_HOST,
     if violations:
         print(f"[gate] FAILED on {hshape}: {len(violations)} violation(s)")
         raise SystemExit(1)
-    print(f"[gate] PASSED: collective contract holds for "
-          f"{list(report['estimators'])} on the {hshape} "
+    print(f"[gate] PASSED: collective contract holds for estimators "
+          f"{list(report['estimators'])} + samplers "
+          f"{list(report['samplers'])} on the {hshape} "
           f"(host, data, model) mesh")
     return report
 

@@ -33,7 +33,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.core import distributed
 from repro.models import api, encdec, transformer
-from repro.serve import retrieval
+from repro.serve import quantized_index, retrieval
 from repro.sharding.rules import (
     ShardCtx,
     gather_head_fd,
@@ -57,7 +57,8 @@ def _argmax_island(cfg: ArchConfig, ctx: ShardCtx, head, h2d):
 
 
 def decode_topk(cfg: ArchConfig, ctx: ShardCtx, head, h2d, k: int, *,
-                index: retrieval.RetrievalIndex | None = None,
+                index: retrieval.RetrievalIndex
+                | quantized_index.QuantizedRetrievalIndex | None = None,
                 beam: int | None = None):
     """Top-k (ids, logits) for a batch of hidden states (DESIGN.md §5).
 
@@ -65,8 +66,15 @@ def decode_topk(cfg: ArchConfig, ctx: ShardCtx, head, h2d, k: int, *,
     h2d: (B, d) hidden states -> ids (B, k) int32 global class ids and
     logits (B, k) fp32, sorted descending.  With an ``index`` the beam
     retrieval path runs (exact at full beam, ``beam`` = recall knob);
-    without one the dense sharded top-k head is the fallback.
+    without one the dense sharded top-k head is the fallback.  Both index
+    families dispatch here — the fp32 Gram ``RetrievalIndex`` and the
+    ``QuantizedRetrievalIndex`` (DESIGN.md §2.9); the isinstance check
+    resolves at trace time, so each treedef jit-compiles its own branch
+    and the engine's double-buffered swap can flip between families
+    without touching compiled code.
     """
+    if isinstance(index, quantized_index.QuantizedRetrievalIndex):
+        return quantized_index.decode_topk(index, h2d, k, beam, ctx)
     if index is not None:
         return retrieval.decode_topk(index, h2d, k, beam, ctx)
     if ctx.mesh is None:
@@ -91,7 +99,8 @@ def decode_topk(cfg: ArchConfig, ctx: ShardCtx, head, h2d, k: int, *,
 
 
 def make_topk_step(cfg: ArchConfig, ctx: ShardCtx, k: int, *,
-                   index: retrieval.RetrievalIndex | None = None,
+                   index: retrieval.RetrievalIndex
+                   | quantized_index.QuantizedRetrievalIndex | None = None,
                    beam: int | None = None):
     """topk_step(params, token (B,1), caches, pos (B,)) ->
     (ids (B, k), logits (B, k), caches).

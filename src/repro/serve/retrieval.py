@@ -73,6 +73,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import hierarchy
 from repro.core.hierarchy import HierarchyStats
+from repro.core.midx import pc_bisect_perm  # noqa: F401  (canonical home
+# moved to core/midx.py — the midx posting lists and this serving index
+# share ONE balanced bisection; re-exported for existing callers)
 from repro.sharding.rules import gather_head_fd, head_fd_axes
 from repro.utils.compat import shard_map
 from repro.utils.misc import log2_int, next_pow2
@@ -137,40 +140,6 @@ class RetrievalIndex:
 def default_leaf_size(n_rows: int, d: int) -> int:
     """Serving leaf size: wide enough to amortize the gather, power of two."""
     return next_pow2(max(2, min(n_rows, max(d, 32))))
-
-
-def pc_bisect_perm(w: Array, n_valid: Array | int, depth: int,
-                   iters: int = 8) -> Array:
-    """Balanced PC-bisection co-clustering permutation.
-
-    w: (n_pad, d) with n_pad = 2^depth * leaf_size.  Level by level, each
-    node's rows are sorted by their projection onto the node's top principal
-    direction (a few power iterations on the uncentered second moment) and
-    split in half — after ``depth`` levels, each leaf holds similar
-    embeddings, which is what makes the retrieval upper bounds
-    discriminative.  Rows at/after ``n_valid`` sort with key +inf, so
-    padding stays a contiguous suffix (the invariant ``hierarchy.build``'s
-    runtime masking relies on).  Returns (n_pad,) int32: packed position ->
-    original row.  O(depth * n * (d + iters * d))."""
-    n_pad, d = w.shape
-    w32 = w.astype(jnp.float32)
-    perm = jnp.arange(n_pad, dtype=jnp.int32)
-    for lvl in range(depth):
-        nb = 1 << lvl
-        bs = n_pad >> lvl
-        blocks = w32[perm].reshape(nb, bs, d)
-        v = jnp.sum(blocks, axis=1)
-        v = v / (jnp.linalg.norm(v, axis=-1, keepdims=True) + 1e-9)
-        for _ in range(iters):
-            u = jnp.einsum("nbd,nd->nb", blocks, v)
-            v = jnp.einsum("nbd,nb->nd", blocks, u)
-            v = v / (jnp.linalg.norm(v, axis=-1, keepdims=True) + 1e-9)
-        key = jnp.einsum("nbd,nd->nb", blocks, v)
-        key = jnp.where(perm.reshape(nb, bs) < n_valid, key, jnp.inf)
-        order = jnp.argsort(key, axis=1)
-        perm = jnp.take_along_axis(perm.reshape(nb, bs), order,
-                                   axis=1).reshape(-1)
-    return perm
 
 
 def ball_stats(w_pad: Array, n_valid: Array | int, depth: int

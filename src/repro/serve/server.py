@@ -58,6 +58,8 @@ from typing import Any, Callable
 import jax
 import numpy as np
 
+from repro.serve.quantized_index import payload_bytes as _payload_bytes
+
 __all__ = [
     "ServeResult",
     "ServingEngine",
@@ -248,6 +250,10 @@ class ServingEngine:
         self._index_ref: tuple[Any, int, int] = (
             index, int(index_version), int(index_train_step))
         self._train_step = int(index_train_step)
+        # gauge: serialized bytes of the CURRENT index snapshot (0 = dense);
+        # the train->serve shipping cost an int8 index exists to shrink.
+        self._index_payload_bytes = _payload_bytes(index) if index is not \
+            None else 0
 
         self._hist = LatencyHistogram()
         self._c = {
@@ -321,12 +327,14 @@ class ServingEngine:
         atomic reference assignment: in-flight microbatches finish on the
         snapshot they read, the next microbatch reads this one.  Returns
         the published version."""
+        pb = _payload_bytes(index) if index is not None else 0
         with self._lock:
             _, old_v, old_step = self._index_ref
             v = int(version) if version is not None else old_v + 1
             step = int(train_step) if train_step is not None else old_step
             self._index_ref = (index, v, step)
             self._c["index_swaps"] += 1
+            self._index_payload_bytes = pb
         return v
 
     def note_train_step(self, step: int) -> None:
@@ -342,6 +350,7 @@ class ServingEngine:
             _, version, idx_step = self._index_ref
             depth = len(self._queue)
             train_step = self._train_step
+            payload = self._index_payload_bytes
             lat = self._hist.snapshot()
         served = c["cache_hits"] + c["cache_misses"]
         c.update(
@@ -350,6 +359,7 @@ class ServingEngine:
             index_train_step=idx_step,
             train_step=train_step,
             index_staleness_steps=max(0, train_step - idx_step),
+            index_payload_bytes=payload,
             batch_occupancy=(c["batch_real"] / c["batch_slots"]
                              if c["batch_slots"] else 0.0),
             cache_hit_rate=(c["cache_hits"] / served if served else 0.0),

@@ -345,9 +345,31 @@ def export_retrieval_index(state: TrainState, cfg: ArchConfig, ctx: ShardCtx,
                                  vocab_size=cfg.vocab_size)
 
 
+def export_quantized_index(state: TrainState, cfg: ArchConfig, ctx: ShardCtx,
+                           bits: int | None = None):
+    """Quantized serving index (DESIGN.md §2.9) from a trained state.
+
+    Same contract as ``export_retrieval_index`` — fresh UNPROJECTED head,
+    never the carried sampler state — but packs the MIDX codebook
+    structure with ``cfg.midx_bits``-wide member rows (int8 by default:
+    ~4x smaller refresh payload over the train->serve seam).  The knobs
+    ride ``ArchConfig`` (``midx_codewords`` / ``midx_codebooks`` /
+    ``sampler_block`` / ``midx_bits``) so the serving index mirrors the
+    training-time sampler's structure by construction."""
+    from repro.serve import quantized_index
+
+    head = api.head_table(state.params, cfg)
+    return quantized_index.build_quantized_index(
+        head, ctx, codewords=cfg.midx_codewords,
+        codebooks=cfg.midx_codebooks, list_size=cfg.sampler_block,
+        bits=bits if bits is not None else cfg.midx_bits,
+        vocab_size=cfg.vocab_size)
+
+
 def serving_index_source(checkpoint_dir: str, cfg: ArchConfig, ctx: ShardCtx,
                          opt: GradientTransform, *, max_len: int = 4096,
-                         leaf_size: int | None = None):
+                         leaf_size: int | None = None,
+                         quantized: bool = False):
     """The serving half of the train->serve refresh seam (DESIGN.md §5.1).
 
     Returns ``poll() -> (RetrievalIndex, step) | None``: probe the
@@ -363,6 +385,20 @@ def serving_index_source(checkpoint_dir: str, cfg: ArchConfig, ctx: ShardCtx,
     The restore template is an ``eval_shape`` skeleton of the training
     state — the serving process never allocates a training state; arrays
     land straight from the npz.
+
+    ``quantized=True`` exports the ``QuantizedRetrievalIndex`` (DESIGN.md
+    §2.9, knobs from cfg) instead of the fp32 Gram index — the refresh
+    payload the engine's ``index_payload_bytes`` gauge measures shrinks
+    ~4x at ``midx_bits=8``.
+
+    Partial-write race: the manifest rename makes COMPLETE checkpoints
+    atomic, but a poll can still catch a directory mid-write (manifest
+    landed, arrays not yet — e.g. a crashed writer, or a copy tool that
+    replays the rename before the data).  A restore failure here must NOT
+    kill the refresher (``IndexRefresher`` stops on source exceptions) and
+    must NOT mark the step as served: report "nothing new" and leave
+    ``last`` untouched so the next poll retries the same step once the
+    writer finishes.
     """
     from repro.checkpoint.manager import CheckpointManager
 
@@ -376,8 +412,13 @@ def serving_index_source(checkpoint_dir: str, cfg: ArchConfig, ctx: ShardCtx,
         step = mgr.latest_step()
         if step is None or step == last["step"]:
             return None
-        state, _ = mgr.restore(like=like, step=step)
+        try:
+            state, _ = mgr.restore(like=like, step=step)
+        except (OSError, KeyError, ValueError):
+            return None  # torn read — retry this step on the next poll
         last["step"] = step
+        if quantized:
+            return export_quantized_index(state, cfg, ctx), step
         return export_retrieval_index(state, cfg, ctx,
                                       leaf_size=leaf_size), step
 

@@ -18,6 +18,10 @@ with open(os.path.join(out_dir, "collective_gate.json")) as f:
     report = json.load(f)
 assert len(report["estimators"]) >= 4, report
 assert all(not r["violations"] for r in report["estimators"].values()), report
+# the sampler dimension: the quantized multi-index family must hold the
+# SAME collective contract (its codebook stats are shard-local)
+assert "midx" in report["samplers"], report
+assert all(not r["violations"] for r in report["samplers"].values()), report
 assert results["mesh"] == {"host": 16, "data": 1, "model": 2}, results["mesh"]
 
 # second run in the SAME process: the env guard must be idempotent

@@ -68,6 +68,16 @@ def test_rff_sampler_sharded_train():
 
 
 @pytest.mark.slow
+def test_midx_sampler_sharded_train():
+    """MIDXSampler on the mesh: quantized codebook stats carried P('model'),
+    the stratified per-shard draw's eq.-2 loss equals a host-side replay of
+    every shard's draws, and 2x4-mesh train steps run in both sync and
+    overlapped refresh modes (DESIGN.md §2.9)."""
+    out = _run("check_midx_train.py")
+    assert "MIDX TRAIN CHECKS PASSED" in out
+
+
+@pytest.mark.slow
 def test_tapas_sampler_sharded_train():
     """TAPAS two-pass sampler on the mesh: the "sample → all-gather pool →
     re-score → resample" loss equals a single-host reconstruction over the

@@ -1,0 +1,293 @@
+"""Quantized serving index (serve/quantized_index.py, DESIGN.md §2.9 + §5):
+fp32-variant exactness against the dense head, the beam/recall knob on a
+trained toy model, int8 payload compression, engine dispatch + payload
+gauge, checkpoint round trip, and the serving_index_source partial-write
+race fix.  The 2x4-mesh variant lives in
+tests/dist_scripts/check_midx_train.py (build island) and the local/mesh
+overlap check inside quantized decode's own smoke coverage."""
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import batch_iterator_for
+from repro.models import api
+from repro.optim import make_optimizer
+from repro.serve import engine, quantized_index, retrieval
+from repro.serve.server import IndexRefresher, ServingEngine
+from repro.sharding.rules import local_ctx
+from repro.train.step import (
+    export_quantized_index,
+    export_retrieval_index,
+    init_train_state,
+    make_train_step,
+    serving_index_source,
+)
+
+CTX = local_ctx()
+
+
+@pytest.mark.parametrize("n", [1000, 256, 130])
+def test_fp32_exhaustive_matches_dense(n):
+    """bits=32 at full beam scores every class exactly: ids identical to
+    the dense top-k head, logits equal (both fp32 dots on the same rows)."""
+    d = 16
+    w = jax.random.normal(jax.random.PRNGKey(n), (n, d)) * 0.3
+    h = jax.random.normal(jax.random.PRNGKey(1), (6, d))
+    idx = quantized_index.build_quantized_index(w, codewords=8, bits=32)
+    ids, logits = quantized_index.decode_topk(idx, h, 10)
+    tids, tlog = retrieval.dense_topk(w, h, 10)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(tids))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(tlog),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_narrow_beam_scores_are_dequantized_dots():
+    """Whatever a narrow beam returns carries its exact dequantized logit,
+    sorted descending — approximation can only DROP candidates, never
+    mis-score survivors — and int8 logits track dense within the absmax
+    quantization error bound."""
+    n, d = 512, 12
+    w = jax.random.normal(jax.random.PRNGKey(3), (n, d)) * 0.4
+    h = jax.random.normal(jax.random.PRNGKey(4), (5, d))
+    idx = quantized_index.build_quantized_index(w, codewords=8, bits=8)
+    ids, logits = quantized_index.decode_topk(idx, h, 8, beam=16)
+    got = np.asarray(logits)
+    # reconstruct the dequantized table and check the returned logits
+    deq = np.asarray(idx.rows, np.float32) * np.asarray(idx.scale)[..., None]
+    w_deq = np.zeros((idx.num_lists_shard * idx.list_size, d), np.float32)
+    w_deq[np.asarray(idx.perm)] = deq.reshape(-1, d)
+    dense_deq = np.asarray(h, np.float32) @ w_deq.T
+    for t in range(5):
+        np.testing.assert_allclose(got[t], dense_deq[t, np.asarray(ids)[t]],
+                                   rtol=1e-5, atol=1e-5)
+        assert (got[t][:-1] >= got[t][1:]).all()
+    # int8 absmax error: |w - deq| <= scale/2 per component
+    err = np.abs(w_deq[: n] - np.asarray(w)[np.arange(n)])
+    bound = np.zeros((n,))
+    bound[np.asarray(idx.perm)[: idx.num_lists_shard * idx.list_size]] = \
+        np.asarray(idx.scale).reshape(-1)
+    assert (err <= bound[:, None] / 2 + 1e-7).all()
+
+
+def _train_toy(vocab=512, steps=300):
+    cfg = get_config("youtube-dnn").reduced(
+        vocab_size=vocab, sampler_block=64, tower_dims=(64, 32))
+    cfg = dataclasses.replace(cfg, sampler="block-quadratic", m_negatives=64)
+    opt = make_optimizer("adamw", 2e-2, weight_decay=0.0)
+    data = batch_iterator_for(cfg, CTX, global_batch=128, seq_len=0, seed=0)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, CTX, opt, max_len=8)
+    step = jax.jit(make_train_step(cfg, CTX, opt))
+    for i in range(steps):
+        state, _ = step(state, next(data),
+                        jax.random.fold_in(jax.random.PRNGKey(9), i))
+    batch = next(data)
+    h, _, _ = api.backbone_hidden(state.params, batch, cfg, CTX)
+    return cfg, state, h
+
+
+def test_trained_model_recall_and_engine_dispatch():
+    """Acceptance gate: on a briefly-trained toy the quantized index serves
+    decode_topk with recall@10 >= 0.95 vs dense argmax (both bit widths),
+    and the engine's decode_topk dispatches the quantized family through
+    the same seam as the fp32 index."""
+    cfg, state, h = _train_toy()
+    head = api.head_table(state.params, cfg)
+    cfg_q = dataclasses.replace(cfg, midx_codewords=16, sampler_block=8)
+
+    idx32 = export_quantized_index(state, cfg_q, CTX, bits=32)
+    beam = idx32.num_lists_shard // 2
+    for bits, idx in ((32, idx32),
+                      (8, export_quantized_index(state, cfg_q, CTX, bits=8))):
+        recall = quantized_index.recall_at_k(idx, head, h, 10, beam)
+        assert recall >= 0.95, (bits, recall, beam)
+
+    # engine seam: isinstance dispatch, exhaustive fp32 == dense argmax
+    ids1, _ = engine.decode_topk(cfg, CTX, head, h, 1, index=idx32)
+    dense1, _ = engine.decode_topk(cfg, CTX, head, h, 1)
+    np.testing.assert_array_equal(np.asarray(ids1), np.asarray(dense1))
+
+
+def test_int8_payload_at_least_4x_smaller_than_fp32_index():
+    """Acceptance gate at n=4096: the int8 quantized index's serialized
+    payload is >= 4x smaller than the fp32 RetrievalIndex built from the
+    same table (the numbers land in BENCH_sampler_cost.json too)."""
+    n, d = 4096, 64
+    w = jax.random.normal(jax.random.PRNGKey(0), (n, d)) / np.sqrt(d)
+    fp = retrieval.build_index(w)
+    q8 = quantized_index.build_quantized_index(w, codewords=16, bits=8)
+    ratio = (quantized_index.payload_bytes(fp)
+             / quantized_index.payload_bytes(q8))
+    assert ratio >= 4.0, ratio
+    assert q8.rows.dtype == jnp.int8
+
+
+def test_quantized_checkpoint_round_trip(tmp_path):
+    """QuantizedRetrievalIndex is a plain pytree: save/restore through the
+    CheckpointManager (int8 dtype preserved) and serve identically."""
+    from repro.checkpoint import CheckpointManager
+
+    w = jax.random.normal(jax.random.PRNGKey(2), (300, 12)) * 0.5
+    h = jax.random.normal(jax.random.PRNGKey(3), (4, 12))
+    idx = quantized_index.build_quantized_index(w, codewords=8, bits=8)
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(1, idx, blocking=True)
+    like = jax.tree_util.tree_map(jnp.zeros_like, idx)
+    restored, _ = mgr.restore(like=like)
+    assert restored.bits == 8 and restored.rows.dtype == jnp.int8
+    assert restored.n == idx.n and restored.v_shard == idx.v_shard
+    ids_a, log_a = quantized_index.decode_topk(idx, h, 7, beam=8)
+    ids_b, log_b = quantized_index.decode_topk(restored, h, 7, beam=8)
+    np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
+    np.testing.assert_array_equal(np.asarray(log_a), np.asarray(log_b))
+
+
+def test_engine_payload_bytes_gauge():
+    """The engine surfaces the serialized size of the CURRENT index snapshot
+    — the train->serve shipping cost the int8 variant shrinks."""
+    n, d, k = 256, 16, 5
+    w = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (n, d)),
+                   np.float32)
+    fp = retrieval.build_index(w, CTX)
+    q8 = quantized_index.build_quantized_index(w, codewords=8, bits=8)
+
+    def decode(index, h):
+        if index is None:
+            return retrieval.dense_topk(w, h, k, n_valid=n)
+        if isinstance(index, quantized_index.QuantizedRetrievalIndex):
+            return quantized_index.decode_topk(index, h, k, None, CTX)
+        return retrieval.decode_topk(index, h, k, None, CTX)
+
+    eng = ServingEngine(decode, d, k, buckets=(1, 2))
+    assert eng.counters()["index_payload_bytes"] == 0  # dense: nothing ships
+    eng.swap_index(fp, version=1)
+    pb_fp = eng.counters()["index_payload_bytes"]
+    assert pb_fp == quantized_index.payload_bytes(fp) > 0
+    eng.swap_index(q8, version=2)
+    pb_q8 = eng.counters()["index_payload_bytes"]
+    assert pb_q8 == quantized_index.payload_bytes(q8)
+    assert pb_fp / pb_q8 >= 4.0, (pb_fp, pb_q8)
+    eng.swap_index(None, version=3)
+    assert eng.counters()["index_payload_bytes"] == 0
+
+
+# --- serving_index_source: partial-write race --------------------------------
+
+
+def _tiny_cfg():
+    return get_config("youtube-dnn").reduced(
+        vocab_size=64, m_negatives=16, sampler_block=16,
+        tower_dims=(32, 16))
+
+
+def test_index_source_survives_partial_write_and_retries(tmp_path):
+    """A poll that races a torn checkpoint write (manifest listed, arrays
+    missing) must report "nothing new" — NOT raise (which kills the
+    IndexRefresher) and NOT mark the step served (the retry contract)."""
+    from repro.checkpoint import CheckpointManager
+
+    cfg = _tiny_cfg()
+    opt = make_optimizer("adamw", 1e-2, weight_decay=0.0)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, CTX, opt, max_len=8)
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, state, blocking=True)
+
+    poll = serving_index_source(str(tmp_path), cfg, CTX, opt, max_len=8)
+    got = poll()
+    assert got is not None
+    idx1, step1 = got
+    assert step1 == 1 and isinstance(idx1, retrieval.RetrievalIndex)
+    assert poll() is None  # unchanged step: nothing re-ships
+
+    # simulate the torn write: step 2 lists (manifest present) but the
+    # arrays file has not landed yet
+    torn = os.path.join(str(tmp_path), "step_00000002")
+    os.makedirs(torn)
+    with open(os.path.join(torn, "manifest.json"), "w") as f:
+        json.dump({"step": 2, "extra": {}, "keys": [], "treedef": ""}, f)
+    assert poll() is None  # torn read: no ship, no exception
+    assert poll() is None  # and the step is NOT marked served
+
+    # the writer finishes (atomic re-save onto the same step): next poll
+    # picks it up
+    state2 = dataclasses.replace(state, step=state.step + 1)
+    mgr.save(2, state2, blocking=True)
+    got2 = poll()
+    assert got2 is not None and got2[1] == 2
+
+
+def test_refresher_stays_alive_through_partial_write(tmp_path):
+    """End-to-end with the engine: the background refresher keeps polling
+    through a torn write (no stored .error) and ships the step once it
+    completes."""
+    from repro.checkpoint import CheckpointManager
+
+    cfg = _tiny_cfg()
+    opt = make_optimizer("adamw", 1e-2, weight_decay=0.0)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, CTX, opt, max_len=8)
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+
+    # torn write FIRST: the refresher's very first polls see only debris
+    torn = os.path.join(str(tmp_path), "step_00000001")
+    os.makedirs(torn)
+    with open(os.path.join(torn, "manifest.json"), "w") as f:
+        json.dump({"step": 1, "extra": {}, "keys": [], "treedef": ""}, f)
+
+    poll = serving_index_source(str(tmp_path), cfg, CTX, opt, max_len=8,
+                                quantized=True)
+    k = 5
+    head = api.head_table(state.params, cfg)
+
+    def decode(index, h):
+        if index is None:
+            return retrieval.dense_topk(np.asarray(head), h, k,
+                                        n_valid=cfg.vocab_size)
+        return quantized_index.decode_topk(index, h, k, None, CTX)
+
+    eng = ServingEngine(decode, 32, k, buckets=(1, 2)).start(warmup=False)
+    ref = IndexRefresher(eng, poll, poll_s=0.02)
+    ref.start()
+    try:
+        time.sleep(0.15)  # several polls against the torn step
+        assert ref.is_alive() and ref.error is None
+        assert ref.swaps == 0
+        mgr.save(1, state, blocking=True)  # writer completes the step
+        deadline = time.time() + 10.0
+        while ref.swaps == 0 and time.time() < deadline:
+            time.sleep(0.02)
+        assert ref.swaps == 1, "completed step was never shipped"
+        c = eng.counters()
+        assert c["index_train_step"] == 1
+        assert c["index_payload_bytes"] > 0  # quantized payload landed
+    finally:
+        ref.stop()
+        eng.stop()
+
+
+def test_index_source_quantized_exports_int8(tmp_path):
+    """quantized=True ships the QuantizedRetrievalIndex with cfg.midx_bits
+    rows — the compact refresh artifact."""
+    from repro.checkpoint import CheckpointManager
+
+    cfg = _tiny_cfg()
+    opt = make_optimizer("adamw", 1e-2, weight_decay=0.0)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, CTX, opt, max_len=8)
+    CheckpointManager(str(tmp_path), keep=3).save(5, state, blocking=True)
+
+    poll = serving_index_source(str(tmp_path), cfg, CTX, opt, max_len=8,
+                                quantized=True)
+    idx, step = poll()
+    assert step == 5
+    assert isinstance(idx, quantized_index.QuantizedRetrievalIndex)
+    assert idx.bits == cfg.midx_bits == 8 and idx.rows.dtype == jnp.int8
+    # the quantized artifact is smaller than the fp32 export of the SAME
+    # state — the reason the refresher ships it
+    fp = export_retrieval_index(state, cfg, CTX)
+    assert (quantized_index.payload_bytes(idx)
+            < quantized_index.payload_bytes(fp))

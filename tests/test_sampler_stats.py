@@ -102,6 +102,8 @@ def _setup(name):
         "block-quadratic": dict(block_size=16),
         "rff": dict(dim=256, leaf_size=8),
         "rff-oracle": dict(dim=256),
+        "midx": dict(codewords=8, list_size=8),
+        "midx-oracle": dict(codewords=8, list_size=8),
     }.get(name, {})
     sampler = make_sampler(name, **kwargs)
     state = sampler.init(jax.random.fold_in(key, 2), w)
@@ -122,7 +124,7 @@ def _setup(name):
         def oracle(hh):
             return blocks.all_class_logq(state["stats"], sampler.kernel, hh,
                                          state["proj"])
-    elif name == "rff":
+    elif name in ("rff", "midx"):
         def oracle(hh):
             return sampler.all_class_logq(state, hh)
     else:  # the brute-force logit / feature oracles
@@ -133,7 +135,8 @@ def _setup(name):
 
 FAMILIES = ["uniform", "unigram", "softmax", "abs-softmax",
             "quadratic-oracle", "quartic-oracle", "rff-oracle",
-            "tree-quadratic", "block-quadratic", "rff"]
+            "tree-quadratic", "block-quadratic", "rff",
+            "midx", "midx-oracle"]
 
 
 @pytest.mark.parametrize("name", FAMILIES)
